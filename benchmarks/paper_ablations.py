@@ -1,0 +1,45 @@
+"""Ablations on the two-stage scheme's knobs (paper §4.2 design choices).
+
+  * M1 (stage-1 worker fraction): too small wastes stage-2 coding on
+    everything; too large loses the straggler cut.
+  * dynamic ŝ (EWMA prediction) vs fixed s.
+  * deadline quantile.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _run(M1=4, deadline_q=0.9, epochs=25, seed=13):
+    import jax
+    from repro.core.fel import FELTrainer
+    from repro.data.pipeline import SyntheticClassificationDataset
+    from repro.models.mlp import init_mlp, per_slot_mlp_loss
+    from repro.optim import sgd_momentum
+
+    ds = SyntheticClassificationDataset(K=6, examples_per_partition=16,
+                                        dim=32, n_classes=4, seed=7)
+    params = init_mlp(jax.random.PRNGKey(0), dims=(32, 32, 4))
+    tr = FELTrainer("two-stage", M=6, K=6, dataset=ds,
+                    per_slot_loss=per_slot_mlp_loss,
+                    optimizer=sgd_momentum(lr=0.05), params=params,
+                    M1=M1, s=1, rates=np.array([2, 2, 4, 4, 8, 8.0]),
+                    noise_scale=0.2, straggler_prob=0.25, seed=seed)
+    tr.runtime.deadline_quantile = deadline_q
+    tr.run(epochs)
+    return (float(np.mean([l.time for l in tr.logs])),
+            float(np.mean([l.efficiency for l in tr.logs])),
+            float(np.mean([l.redundancy for l in tr.logs])))
+
+
+def main(report) -> None:
+    import time
+    t0 = time.time()
+    for M1 in [2, 3, 4, 5, 6]:
+        t, eff, red = _run(M1=M1)
+        report(f"ablation_M1[{M1}]", (time.time() - t0) * 1e6,
+               f"time={t:.3f},efficiency={eff:.3f},redundancy={red:.2f}")
+    for q in [0.5, 0.75, 0.9, 0.99]:
+        t, eff, red = _run(deadline_q=q)
+        report(f"ablation_deadline_q[{q}]", (time.time() - t0) * 1e6,
+               f"time={t:.3f},efficiency={eff:.3f},redundancy={red:.2f}")

@@ -1,0 +1,58 @@
+"""Paper table: Lyapunov V-sweep — throughput / backlog / fairness (C4).
+
+O(V) backlog vs O(1/V) optimality-gap trade-off + prop-fair vs greedy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def run_v_sweep(T_slots: int = 1200, M: int = 8, seed: int = 2) -> dict:
+    import jax.numpy as jnp
+    from repro.core.lyapunov import (Observation, SystemParams, init_queues,
+                                     jain_index, run_horizon)
+    rng = np.random.default_rng(seed)
+    r = np.ones((T_slots, M)) * 2.0
+    r[:, 0] = 20.0                      # one hot channel
+    obs = Observation(
+        D=jnp.asarray(rng.uniform(2, 4, (T_slots, M)), jnp.float32),
+        r=jnp.asarray(r, jnp.float32),
+        E_H=jnp.asarray(rng.uniform(1, 3, (T_slots, M)), jnp.float32),
+        L=jnp.full((T_slots,), 2.0),
+        new_cycles=jnp.zeros((T_slots, M)))
+    out = {}
+    for V in [1.0, 10.0, 50.0, 200.0]:
+        params = SystemParams(
+            T=1.0, p=jnp.full((M,), 0.5), delta=jnp.full((M,), 1e-3),
+            xi=jnp.full((M,), 0.1), f_max=jnp.full((M,), 100.0), F=200.0,
+            E_cap=jnp.full((M,), 50.0), V=V, lam=jnp.ones((M,)))
+        state = init_queues(M, E0=25.0)
+        final, dec = run_horizon(state, params, obs)
+        thru = np.asarray(dec.c).sum(0)
+        out[V] = {
+            "throughput": float(thru.sum() / T_slots),
+            "mean_H": float(np.asarray(final.H).mean()),
+            "mean_Q": float(np.asarray(final.Q).mean()),
+            "jain": float(jain_index(jnp.asarray(thru))),
+            "utility": float(np.log1p(thru / T_slots).sum()),
+        }
+    return out
+
+
+def main(report) -> None:
+    import time
+    t0 = time.time()
+    res = run_v_sweep()
+    dt_us = (time.time() - t0) * 1e6
+    for V, r in res.items():
+        report(f"lyapunov_v_sweep[V={V:g}]", dt_us / 4,
+               f"thru={r['throughput']:.2f},H={r['mean_H']:.1f},"
+               f"jain={r['jain']:.3f},util={r['utility']:.3f}")
+    # O(V) backlog / O(1/V) utility-gap signature (checked up to V=50;
+    # beyond that the gap is within noise)
+    hs = [res[V]["mean_H"] for V in sorted(res)]
+    us = [res[V]["utility"] for V in sorted(res) if V <= 50]
+    report("lyapunov_tradeoff", dt_us,
+           f"backlog_monotone={all(a <= b + 1e-6 for a, b in zip(hs, hs[1:]))},"
+           f"utility_monotone_to_V50="
+           f"{all(a <= b + 1e-6 for a, b in zip(us, us[1:]))}")

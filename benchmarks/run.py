@@ -1,0 +1,38 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run fel        # one suite
+"""
+import sys
+import traceback
+
+
+def report(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+SUITES = ["paper_fel", "paper_lyapunov", "paper_ablations", "kernel_bench",
+          "roofline_table"]
+
+
+def main() -> None:
+    want = sys.argv[1] if len(sys.argv) > 1 else None
+    failures = []
+    for mod_name in SUITES:
+        if want and want not in mod_name:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+            mod.main(report)
+        except Exception:
+            failures.append(mod_name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED suites: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Full paper comparison: TSDCFL vs CRS vs FRS vs uncoded (Fig 5/6 analog).
+
+Identical sampled worker behaviour per scheme (same seeds), the paper's
+6-worker heterogeneous cluster (2,2,4,4,8,8 cores), 1-2 injected 8x
+stragglers per epoch.  Prints accuracy-vs-epoch (identical — exact
+recovery) and wall-clock/utilization (TSDCFL wins).
+
+Run:  PYTHONPATH=src python examples/coded_fel_sim.py [epochs]
+"""
+import sys
+
+import jax
+import numpy as np
+
+from repro.core.fel import FELTrainer
+from repro.data.pipeline import SyntheticClassificationDataset
+from repro.models.mlp import init_mlp, mlp_accuracy, per_slot_mlp_loss
+from repro.optim import sgd_momentum
+
+EPOCHS = int(sys.argv[1]) if len(sys.argv) > 1 else 30
+RATES = np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0])
+
+
+def run(scheme):
+    ds = SyntheticClassificationDataset(K=6, examples_per_partition=32,
+                                        dim=64, n_classes=10, seed=7)
+    params = init_mlp(jax.random.PRNGKey(0), dims=(64, 64, 10))
+    tr = FELTrainer(scheme, M=6, K=6, dataset=ds,
+                    per_slot_loss=per_slot_mlp_loss,
+                    optimizer=sgd_momentum(lr=0.05), params=params,
+                    M1=4, s=1, rates=RATES, noise_scale=0.2,
+                    straggler_prob=0.25, seed=11)
+    tr.run(EPOCHS)
+    test = ds.partition(10_000, 0)
+    acc = float(mlp_accuracy(tr.params, test))
+    return tr, acc
+
+
+print(f"{'scheme':<12} {'final_acc':>9} {'mean_epoch_time':>15} "
+      f"{'cum_time':>9} {'utilization':>11} {'redundancy':>10}")
+results = {}
+for scheme in ["two-stage", "cyclic", "fractional", "uncoded"]:
+    tr, acc = run(scheme)
+    times = [l.time for l in tr.logs]
+    utils = [l.utilization for l in tr.logs]
+    reds = [l.redundancy for l in tr.logs]
+    results[scheme] = (tr, acc)
+    print(f"{scheme:<12} {acc:9.3f} {np.mean(times):15.3f} "
+          f"{np.sum(times):9.1f} {np.mean(utils):11.2f} "
+          f"{np.mean(reds):10.2f}")
+
+# epoch-parity check (paper Fig 5a/6a): all schemes same trajectory
+losses = {s: [l.loss for l in r[0].logs] for s, (r) in
+          ((s, results[s]) for s in results)}
+ref = np.asarray(losses["uncoded"])
+print("\nepoch-based convergence parity (max |Δloss| vs uncoded):")
+for s in ["two-stage", "cyclic", "fractional"]:
+    print(f"  {s:<12} {np.abs(np.asarray(losses[s]) - ref).max():.2e}")
+print("\n(identical epoch trajectories; TSDCFL reaches them in the least "
+      "wall-clock — the paper's headline claim)")

@@ -1,0 +1,38 @@
+"""The Lyapunov fairness scheduler in isolation (paper §4.3, P4–P7).
+
+Shows the V-knob trading throughput against backlog, and the closed-form
+per-slot decisions on a heterogeneous 8-worker system.
+
+Run:  PYTHONPATH=src python examples/lyapunov_scheduling.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lyapunov import (Observation, SystemParams, init_queues,
+                                 jain_index, run_horizon)
+
+M, T_slots = 8, 800
+rng = np.random.default_rng(0)
+r = np.ones((T_slots, M)) * 2.0
+r[:, 0] = 20.0                        # worker 0: 10x better channel
+obs = Observation(
+    D=jnp.asarray(rng.uniform(2, 4, (T_slots, M)), jnp.float32),
+    r=jnp.asarray(r, jnp.float32),
+    E_H=jnp.asarray(rng.uniform(1, 3, (T_slots, M)), jnp.float32),
+    L=jnp.full((T_slots,), 2.0),
+    new_cycles=jnp.zeros((T_slots, M)))
+
+print(f"{'V':>6} {'throughput':>11} {'mean H (backlog)':>17} "
+      f"{'Jain fairness':>14}")
+for V in [1.0, 10.0, 50.0, 200.0]:
+    params = SystemParams(
+        T=1.0, p=jnp.full((M,), 0.5), delta=jnp.full((M,), 1e-3),
+        xi=jnp.full((M,), 0.1), f_max=jnp.full((M,), 100.0), F=200.0,
+        E_cap=jnp.full((M,), 50.0), V=V, lam=jnp.ones((M,)))
+    final, dec = run_horizon(init_queues(M, E0=25.0), params, obs)
+    thru = np.asarray(dec.c).sum(0)
+    print(f"{V:>6g} {thru.sum()/T_slots:>11.2f} "
+          f"{float(np.asarray(final.H).mean()):>17.1f} "
+          f"{float(jain_index(jnp.asarray(thru))):>14.3f}")
+print("\nO(V) backlog vs O(1/V) optimality gap — the drift-plus-penalty "
+      "signature (paper Lemma 4).")

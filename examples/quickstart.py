@@ -1,0 +1,54 @@
+"""Quickstart: the TSDCFL core in 60 seconds.
+
+1. Build a two-stage coded epoch plan (stage-1 uncoded + stage-2 RS code).
+2. Kill stragglers; decode the EXACT full gradient from the survivors.
+3. Run a few coded training epochs on the paper's 6-worker cluster.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core.coding import (TwoStagePlanner, cyclic_repetition,
+                               decode_weights)
+from repro.core.fel import FELTrainer
+from repro.data.pipeline import SyntheticClassificationDataset
+from repro.models.mlp import init_mlp, per_slot_mlp_loss
+from repro.optim import sgd_momentum
+
+# ------------------------------------------------------------------ #
+print("== 1. classic gradient coding (CRS baseline) ==")
+M, s = 6, 2
+scheme = cyclic_repetition(M, s)
+g = np.random.default_rng(0).standard_normal((scheme.K, 4))  # partial grads
+coded = scheme.B @ g                       # what each worker returns
+alive = np.array([True, True, False, True, False, True])     # 2 stragglers
+a = decode_weights(scheme, alive)
+print("decode error:",
+      np.abs(a @ coded - g.sum(0)).max(), "(exact recovery)")
+
+# ------------------------------------------------------------------ #
+print("\n== 2. two-stage dynamic plan ==")
+planner = TwoStagePlanner(M=6, K=12, M1=4)
+st1 = planner.plan_stage1(epoch=0)
+finished = np.array([True, False, True, True])   # worker 1 missed deadline
+st2 = planner.plan_stage2(st1, finished, s=1, speeds=np.ones(6))
+print(f"stage-1 covered {len(st2.covered_partitions)}/12 partitions; "
+      f"stage-2 codes {len(st2.uncovered_partitions)} partitions over "
+      f"{len(st2.active_workers)} workers (s=1)")
+
+# ------------------------------------------------------------------ #
+print("\n== 3. coded training on the paper's heterogeneous cluster ==")
+ds = SyntheticClassificationDataset(K=6, examples_per_partition=16, dim=32,
+                                    n_classes=4, seed=7)
+params = init_mlp(jax.random.PRNGKey(0), dims=(32, 32, 4))
+trainer = FELTrainer("two-stage", M=6, K=6, dataset=ds,
+                     per_slot_loss=per_slot_mlp_loss,
+                     optimizer=sgd_momentum(lr=0.05), params=params,
+                     M1=4, s=1, rates=np.array([2, 2, 4, 4, 8, 8.0]),
+                     straggler_prob=0.25, seed=0)
+for log in trainer.run(8):
+    print(f"  epoch {log.epoch}: loss={log.loss:.3f} "
+          f"time={log.time:.2f} util={log.utilization:.2f} "
+          f"stragglers={log.n_stragglers}")
+print("\nok — see examples/coded_fel_sim.py for the full paper comparison")

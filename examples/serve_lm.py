@@ -1,0 +1,8 @@
+"""Serve a small LM with Lyapunov request admission (paper §4.3 at the
+serving layer): batched prefill + decode, proportional-fair across clients.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+main(["--arch", "tiny", "--slots", "30", "--clients", "6"])

@@ -1,0 +1,11 @@
+"""Train a small LM end-to-end (data pipeline → coded runtime → checkpoint).
+
+Thin wrapper over the production driver; see ``repro.launch.train`` for all
+flags (``--preset 100m --steps 300`` reproduces the ~100M-parameter run).
+
+Run:  PYTHONPATH=src python examples/train_lm.py
+"""
+from repro.launch.train import main
+
+main(["--arch", "tiny", "--steps", "30", "--coded", "--log-every", "5",
+      "--ckpt-dir", "/tmp/repro_ck"])

@@ -1,0 +1,148 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Calibrated-composition cost model.
+
+XLA's HLO cost analysis counts while-loop bodies ONCE (verified in
+EXPERIMENTS.md §Methodology), so the scanned production program under-reports
+FLOPs/bytes by ~n_layers and the HLO text shows per-layer collectives once.
+Fix: lower small *fully-unrolled* layer-count variants of each cell on the
+same mesh/shardings, then compose:
+
+    unit  = m(2P) − m(P)          (P = one pattern unit of layers)
+    base  = m(P) − unit           (embed + head + CE + optimizer fixed cost…)
+    total = base + n_repeat · unit [+ tail: m(P+T) − m(P)]
+
+All three roofline inputs (FLOPs/device, HBM bytes/device, collective
+bytes/device) compose this way because layers are homogeneous within a
+group.  Unrolled variants use ≤ 2P layers so compiles stay tractable.
+
+CLI:  python -m repro.analysis.costmodel --arch X --shape Y [--out d]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+
+def _measure_variant(cfg, shape, mesh, n_layers: int,
+                     layout: str = "tp") -> dict:
+    import jax
+    from repro.analysis.hlo import collective_bytes
+    from repro.launch.inputs import input_specs_for
+    from repro.launch.mesh import batch_axes
+    from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                    make_train_step)
+    from repro.models import settings
+
+    cfg_v = dataclasses.replace(cfg, n_layers=n_layers)
+    spec = input_specs_for(cfg_v, shape, mesh, layout)
+    dp = spec["dp_shards"]
+    with jax.set_mesh(mesh), settings.use_batch_axes(spec["batch_axes"]), \
+            settings.use_moe_buffer_spec(spec.get("moe_buffer_spec")), \
+            settings.use_head_spec(spec.get("head_spec")), \
+            settings.unroll_loops():
+        if shape.kind == "train":
+            step, _ = make_train_step(cfg_v, dp)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                spec["params"], spec["opt_state"], spec["batch"])
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg_v, dp)
+            lowered = jax.jit(step).lower(spec["params"], spec["batch"])
+        else:
+            step = make_serve_step(cfg_v, dp)
+            lowered = jax.jit(step, donate_argnums=(2,)).lower(
+                spec["params"], spec["tokens"], spec["caches"], spec["pos"])
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll)}
+
+
+def cell_cost(arch: str, shape_name: str, *, multi_pod: bool = False,
+              out_dir: str = "artifacts/costmodel", layout: str = "tp",
+              overrides: dict | None = None, mesh_str: str | None = None
+              ) -> dict:
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh, make_mesh_from_str
+    from repro.models.transformer import group_layout
+
+    cfg = get_config(arch)
+    tag = ""
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+        tag = "-" + "-".join(f"{k}={v}" for k, v in sorted(overrides.items()))
+    shape = SHAPES[shape_name]
+    mesh = (make_mesh_from_str(mesh_str) if mesh_str
+            else make_production_mesh(multi_pod=multi_pod))
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    if layout != "tp":
+        mesh_name += f"-{layout}"
+    mesh_name += tag
+    groups = group_layout(cfg)
+    P = len(groups[0].kinds)
+    tail = len(groups[1].kinds) if len(groups) > 1 else 0
+
+    t0 = time.time()
+    m1 = _measure_variant(cfg, shape, mesh, P, layout)
+    m2 = _measure_variant(cfg, shape, mesh, 2 * P, layout)
+    unit = {k: m2[k] - m1[k] for k in m1}
+    base = {k: m1[k] - unit[k] for k in m1}
+    n_rep = groups[0].n_repeat
+    total = {k: base[k] + n_rep * unit[k] for k in m1}
+    if tail:
+        m3 = _measure_variant(cfg, shape, mesh, P + tail, layout)
+        for k in total:
+            total[k] += m3[k] - m1[k]
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "flops_per_device": max(total["flops"], 0.0),
+        "bytes_per_device": max(total["bytes"], 0.0),
+        "collective_bytes_per_device": max(total["coll"], 0.0),
+        "unit": unit, "base": base, "n_repeat": n_rep, "P": P, "tail": tail,
+        "measure_s": round(time.time() - t0, 1),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    fn = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    with open(fn, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"[cost {arch} × {shape_name} × {mesh_name}] "
+          f"flops/dev={result['flops_per_device']:.3e} "
+          f"bytes/dev={result['bytes_per_device']:.3e} "
+          f"coll/dev={result['collective_bytes_per_device']:.3e} "
+          f"({result['measure_s']}s)")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--layout", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--remat", default=None, choices=["none", "dots", "full"])
+    ap.add_argument("--param-dtype", default=None)
+    ap.add_argument("--meshshape", default=None)
+    args = ap.parse_args(argv)
+    ov = {}
+    if args.remat:
+        ov["remat"] = args.remat
+    if args.param_dtype:
+        ov["param_dtype"] = args.param_dtype
+    ov = ov or None
+    try:
+        cell_cost(args.arch, args.shape, multi_pod=args.multipod,
+                  layout=args.layout, overrides=ov, mesh_str=args.meshshape)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

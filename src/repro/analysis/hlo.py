@@ -1,0 +1,75 @@
+"""HLO-text analysis: collective-traffic accounting for the roofline.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but NOT collective
+bytes, so we parse the post-SPMD per-device HLO and sum operand sizes of
+every collective op.
+
+Bytes model (per device, per op, documented for the roofline):
+  all-reduce         2 × size   (ring reduce-scatter + all-gather)
+  all-gather         1 × result size  (receives (n-1)/n ≈ 1 of the result)
+  reduce-scatter     1 × operand size
+  all-to-all         1 × size
+  collective-permute 1 × size
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "parse_collectives"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+# e.g.  %all-gather.3 = bf16[2,1376,8192]{...} all-gather(...)
+_LINE_RE = re.compile(
+    r"=\s*(\(?[a-z0-9_\[\],\s{}:#*\"]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_ARRAY_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _array_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Returns {op_kind: {'count': int, 'bytes': int, 'weighted': float}}."""
+    out = defaultdict(lambda: {"count": 0, "bytes": 0, "weighted": 0.0})
+    for line in hlo_text.splitlines():
+        # skip the -done halves of async pairs (counted at -start)
+        if "-done" in line:
+            continue
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        b = _array_bytes(type_str)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+        out[kind]["weighted"] += b * _FACTOR[kind]
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> float:
+    """Total factor-weighted collective bytes per device."""
+    return sum(v["weighted"] for v in parse_collectives(hlo_text).values())

@@ -1,0 +1,5 @@
+from repro.compress.quantize import (dequantize_int8, make_ef_quantizer,
+                                     make_ef_topk, quantize_int8, topk_mask)
+
+__all__ = ["dequantize_int8", "make_ef_quantizer", "make_ef_topk",
+           "quantize_int8", "topk_mask"]

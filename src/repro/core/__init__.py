@@ -1,0 +1,16 @@
+"""TSDCFL core: gradient coding + two-stage runtime + Lyapunov scheduling."""
+from repro.core import coding, lyapunov
+from repro.core.coded_step import (SlotPlan, build_slot_plan,
+                                   make_coded_train_step, make_train_step,
+                                   slot_weights)
+from repro.core.runtime import (CompletionTimeModel, EpochResult,
+                                TwoStageRuntime,
+                                simulate_epoch_single_stage)
+
+__all__ = [
+    "coding", "lyapunov",
+    "SlotPlan", "build_slot_plan", "make_coded_train_step",
+    "make_train_step", "slot_weights",
+    "CompletionTimeModel", "EpochResult", "TwoStageRuntime",
+    "simulate_epoch_single_stage",
+]

@@ -1,0 +1,169 @@
+"""Two-stage dynamic coded strategy (paper §III.2 + §4.2).
+
+Stage 1: ``M₁`` of ``M`` workers start **uncoded** on a disjoint split of the
+K partitions for a deadline ``T_comp``.  When the deadline fires, ``M_c``
+workers have finished, covering ``K_c`` partitions.
+
+Stage 2: the ``M₁−M_c`` unfinished workers continue, and the ``M−M₁`` fresh
+workers start, under a Vandermonde (Lemma-2) code over only the ``K−K_c``
+uncovered partitions, robust to any ``s`` stragglers among the active
+workers.  Per-worker load follows Eq. 16:
+
+    n_m = ((K−K_c)(s+1) − Σ_l n_l) · W_m / Σ_{l∈fresh} W_l
+
+where Σ_l n_l are the copies the continuing workers already hold.  If
+``K_c == K`` the code is never triggered (paper's fast path).
+
+Deviation (documented in DESIGN.md §2): continuing workers participate in
+the stage-2 *coefficient solve* (their rows are re-coded over their remaining
+partitions) rather than keeping raw coefficient-1 rows as in the paper's
+Example 1; this makes the span condition hold deterministically for every
+straggler pattern instead of generically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .matrices import CodingScheme, default_nodes, uncoded, vandermonde_code
+
+__all__ = ["Stage1Plan", "Stage2Plan", "TwoStagePlanner"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage1Plan:
+    scheme: CodingScheme          # uncoded, rows = stage-1 workers
+    workers: np.ndarray           # global ids of the M1 stage-1 workers
+    partitions: np.ndarray        # global ids (= arange(K))
+
+    @property
+    def M1(self) -> int:
+        return len(self.workers)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage2Plan:
+    scheme: Optional[CodingScheme]  # None when K_c == K (code not triggered)
+    active_workers: np.ndarray      # global ids, rows of scheme.B
+    uncovered_partitions: np.ndarray
+    covered_partitions: np.ndarray
+    finished_workers: np.ndarray    # the M_c stage-1 finishers
+
+    @property
+    def triggered(self) -> bool:
+        return self.scheme is not None
+
+
+class TwoStagePlanner:
+    """Builds stage-1 and stage-2 plans for each epoch.
+
+    Args:
+      M:  total workers.
+      K:  data partitions.
+      M1: stage-1 worker count (paper: randomly selected; we rotate the
+          selection deterministically by epoch for fairness, or take the
+          predicted-fastest M1 when speeds are provided).
+      select: 'rotate' | 'fastest'.
+    """
+
+    def __init__(self, M: int, K: int, M1: int, *, select: str = "rotate",
+                 seed: int = 0):
+        if not 1 <= M1 <= M:
+            raise ValueError(f"need 1 <= M1 <= M, got M1={M1}, M={M}")
+        self.M, self.K, self.M1 = M, K, M1
+        self.select = select
+        self._rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------------------ #
+    def plan_stage1(self, epoch: int, speeds: Optional[np.ndarray] = None
+                    ) -> Stage1Plan:
+        if self.select == "fastest" and speeds is not None:
+            order = np.argsort(-np.asarray(speeds))
+            workers = np.sort(order[: self.M1])
+        else:  # rotate through the pool so stage-1 duty is shared
+            start = (epoch * self.M1) % self.M
+            workers = (start + np.arange(self.M1)) % self.M
+            workers = np.sort(workers)
+        partitions = np.arange(self.K)
+        scheme = uncoded(self.M1, self.K, workers=workers,
+                         partitions=partitions)
+        if speeds is not None:
+            # heterogeneity-aware disjoint split: partition counts ∝ W_m
+            # (the paper's Eq-16 load principle, applied at stage 1 so slow
+            #  workers aren't structurally doomed to miss the deadline)
+            from .matrices import allocate_supports
+            caps = np.asarray(speeds, np.float64)[workers]
+            caps = caps / max(caps.sum(), 1e-12) * self.K
+            support = allocate_supports(self.K, 0, caps)
+            B = np.zeros((self.M1, self.K))
+            for k, (m,) in enumerate(support):
+                B[m, k] = 1.0
+            scheme = dataclasses.replace(scheme, B=B)
+        return Stage1Plan(scheme=scheme, workers=workers,
+                          partitions=partitions)
+
+    # ------------------------------------------------------------------ #
+    def plan_stage2(self, stage1: Stage1Plan, finished_mask: np.ndarray,
+                    s: int, speeds: np.ndarray) -> Stage2Plan:
+        """Build the stage-2 code from the observed stage-1 completions.
+
+        Args:
+          finished_mask: bool (M1,) — which stage-1 workers finished by the
+            deadline (the paper's M_c set).
+          s: straggler tolerance for stage 2 (dynamically predicted).
+          speeds: (M,) historical speeds W_m for Eq. 16.
+        """
+        finished_mask = np.asarray(finished_mask, dtype=bool)
+        if finished_mask.shape != (stage1.M1,):
+            raise ValueError("finished_mask must have shape (M1,)")
+        speeds = np.asarray(speeds, dtype=np.float64)
+
+        finished_workers = stage1.workers[finished_mask]
+        continuing_workers = stage1.workers[~finished_mask]
+        fresh_workers = np.setdiff1d(np.arange(self.M), stage1.workers)
+        active_workers = np.concatenate([continuing_workers, fresh_workers])
+
+        # Covered partitions: union of finished workers' stage-1 assignments.
+        B1 = stage1.scheme.B  # (M1, K), rows aligned with stage1.workers
+        covered_cols = (B1[finished_mask] != 0).any(axis=0)
+        covered = stage1.partitions[covered_cols]
+        uncovered = stage1.partitions[~covered_cols]
+        K_rem = len(uncovered)
+
+        if K_rem == 0 or len(active_workers) == 0:
+            return Stage2Plan(scheme=None, active_workers=active_workers,
+                              uncovered_partitions=uncovered,
+                              covered_partitions=covered,
+                              finished_workers=finished_workers)
+
+        s = int(min(s, len(active_workers) - 1))
+        s = max(s, 0)
+
+        # Eq. 16 capacities. Continuing worker l: n_l = its count of still-
+        # uncovered stage-1 partitions.  Fresh worker m: share of the
+        # remaining copies proportional to W_m.
+        n_cont = (B1[~finished_mask][:, ~covered_cols] != 0).sum(axis=1)
+        n_cont = n_cont.astype(np.float64)
+        total_copies = (K_rem) * (s + 1)
+        remaining_copies = max(total_copies - float(n_cont.sum()), 0.0)
+        W_fresh = speeds[fresh_workers] if len(fresh_workers) else np.zeros(0)
+        if len(fresh_workers):
+            W_sum = float(W_fresh.sum())
+            if W_sum <= 0:
+                W_fresh = np.ones(len(fresh_workers))
+                W_sum = float(len(fresh_workers))
+            n_fresh = remaining_copies * W_fresh / W_sum
+        else:
+            n_fresh = np.zeros(0)
+        capacities = np.concatenate([n_cont, n_fresh])
+
+        nodes = default_nodes(self.M)[active_workers]
+        scheme = vandermonde_code(K_rem, s, capacities,
+                                  workers=active_workers,
+                                  partitions=uncovered, nodes=nodes)
+        return Stage2Plan(scheme=scheme, active_workers=active_workers,
+                          uncovered_partitions=uncovered,
+                          covered_partitions=covered,
+                          finished_workers=finished_workers)

@@ -1,0 +1,73 @@
+"""Queue dynamics for the fairness transmission layer (paper Eqs. 5–13).
+
+State per worker m (all vectorized over workers, jnp arrays so the whole
+per-slot update jits and runs on-device):
+
+  Q_m  — data backlog (gradient bytes waiting to be uploaded), Eq. 7
+  H_m  — virtual admission queue for the auxiliary variable y, §4.3
+  E_m  — battery/energy budget backlog, Eq. 11
+  R_m  — worker CPU-cycle backlog, Eq. 12
+plus the scalar
+  R_server — server CPU-cycle backlog, Eq. 13.
+
+On TPU pods the physical meanings are remapped (DESIGN.md §2): r_m(t) is the
+worker's ICI bandwidth share, energy is a per-host power/thermal budget —
+the queue algebra is unchanged from the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QueueState", "SystemParams", "init_queues", "step_queues"]
+
+
+class QueueState(NamedTuple):
+    Q: jax.Array          # (M,) data backlog
+    H: jax.Array          # (M,) virtual admission queue
+    E: jax.Array          # (M,) energy backlog
+    R: jax.Array          # (M,) worker cycle backlog
+    R_server: jax.Array   # ()   server cycle backlog
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemParams:
+    """Static per-worker physics (paper §III.3 symbols)."""
+    T: float                 # slot length
+    p: jnp.ndarray           # (M,) transmit power p_m
+    delta: jnp.ndarray       # (M,) energy per CPU cycle δ_m
+    xi: jnp.ndarray          # (M,) server cycles per bit ξ_m
+    f_max: jnp.ndarray       # (M,) max worker CPU cycles per slot
+    F: float                 # server cycles per slot F(t)
+    E_cap: jnp.ndarray       # (M,) battery capacity
+    V: float                 # Lyapunov trade-off knob
+    lam: jnp.ndarray         # (M,) fairness weights λ_m
+
+
+def init_queues(M: int, *, E0: float = 0.0) -> QueueState:
+    z = jnp.zeros((M,))
+    return QueueState(Q=z, H=z, E=jnp.full((M,), E0), R=z,
+                      R_server=jnp.zeros(()))
+
+
+def step_queues(state: QueueState, params: SystemParams, *,
+                d: jax.Array, c: jax.Array, y: jax.Array,
+                e_store: jax.Array, e_up: jax.Array, e_com: jax.Array,
+                f: jax.Array, new_cycles: jax.Array) -> QueueState:
+    """One-slot queue evolution, Eqs. 7 / (virtual H) / 11 / 12 / 13.
+
+    Args:
+      d: admitted data, c: transmitted data, y: auxiliary target,
+      e_store: harvested energy stored, e_up/e_com: spent energy,
+      f: worker cycles executed, new_cycles: new work arriving at workers.
+    """
+    Q = jnp.maximum(state.Q + d - c, 0.0)
+    H = jnp.maximum(state.H + y - d, 0.0)
+    E = jnp.clip(state.E - e_up - e_com + e_store, 0.0, params.E_cap)
+    R = jnp.maximum(state.R - f, 0.0) + new_cycles
+    R_server = (jnp.maximum(state.R_server - params.F, 0.0)
+                + jnp.sum(c * params.xi))
+    return QueueState(Q=Q, H=H, E=E, R=R, R_server=R_server)

@@ -1,0 +1,144 @@
+"""Drift-plus-penalty scheduler — closed-form P4–P7 decisions (paper §4.3).
+
+Each slot, given observed arrivals/channel state and the queue backlogs
+Θ(t) = (H, Q, E, R, R_server), we minimize the Lemma-4 upper bound of the
+one-slot drift-plus-penalty Δ_V(t).  The bound separates, giving four
+independent subproblems with closed forms:
+
+  P4  auxiliary variable  : y*_m = clip(V/(H_m ln2) − 1/ln2, 0, D_m)
+  P5  admission           : d*_m = D_m · 1[Q_m < H_m]
+  P6  energy intake       : e*_store = E^H_m · 1[E_m < θ_m]   (perturbed)
+  P7  transmission time   : continuous knapsack over ΣL(t) sub-channel time,
+                            marginal utility per unit time
+                              w_m = Q_m·r_m + (E_m−θ_m)·p_m − R_server·ξ_m·r_m,
+                            per-worker cap min(T, Q_m/r_m, E_m/p_m)
+  (+) worker compute      : f*_m = min(f_max, R_m) work-conserving when the
+                            battery covers e_com (drift term −R_m f_m).
+
+Deviation noted in DESIGN.md: P6/P7 use the standard Neely *perturbed*
+energy queue weight (E_m − θ_m) — the paper's unperturbed E_m ≥ 0 never
+charges the battery under strict minimization; the perturbation (θ = E_cap/2
+by default) restores the intended charge-when-low / spend-when-high policy
+and preserves all stability guarantees.
+
+Everything is vectorized jnp and jit-compatible (static worker count).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .queues import QueueState, SystemParams, step_queues
+
+__all__ = ["Observation", "Decisions", "schedule_slot", "run_horizon",
+           "jain_index"]
+
+_LN2 = 0.6931471805599453
+
+
+class Observation(NamedTuple):
+    D: jax.Array           # (M,) arrival data this slot (from backprop)
+    r: jax.Array           # (M,) channel capacity (bytes / unit time)
+    E_H: jax.Array         # (M,) harvestable energy this slot
+    L: jax.Array           # ()   available sub-channels
+    new_cycles: jax.Array  # (M,) new compute work arriving at workers
+
+
+class Decisions(NamedTuple):
+    y: jax.Array
+    d: jax.Array
+    nu: jax.Array          # (M,) transmission time
+    c: jax.Array           # (M,) transmitted data
+    e_store: jax.Array
+    e_up: jax.Array
+    e_com: jax.Array
+    f: jax.Array
+
+
+def _p4_auxiliary(H: jax.Array, D: jax.Array, V: float) -> jax.Array:
+    """P4: maximize V·log2(1+y) − H·y over y ∈ [0, D] (concave in y).
+
+    True stationary point: d/dy [V·log2(1+y) − H·y] = 0 ⟹
+    y* = V/(H·ln2) − 1.  (The paper prints −1/ln2 — a calculus slip; our
+    hypothesis test `test_p4_closed_form_is_argmax` checks the argmax
+    numerically.)  Gate: y* > 0 ⟺ V/ln2 > H, as in the paper.
+    """
+    unconstrained = V / (jnp.maximum(H, 1e-12) * _LN2) - 1.0
+    y = jnp.clip(unconstrained, 0.0, D)
+    return jnp.where(V / _LN2 - H <= 0.0, 0.0, y)
+
+
+def _p5_admission(Q: jax.Array, H: jax.Array, D: jax.Array) -> jax.Array:
+    """P5: minimize (Q−H)·d over d ∈ [0, D]."""
+    return jnp.where(Q < H, D, 0.0)
+
+
+def _p6_energy(E: jax.Array, E_H: jax.Array, theta: jax.Array) -> jax.Array:
+    """P6 (perturbed): store harvested energy when battery below θ."""
+    return jnp.where(E < theta, E_H, 0.0)
+
+
+def _p7_knapsack(Q: jax.Array, E: jax.Array, R_server: jax.Array,
+                 r: jax.Array, L: jax.Array, params: SystemParams,
+                 theta: jax.Array) -> jax.Array:
+    """P7: allocate transmission time ν over Σν ≤ T·L (continuous knapsack).
+
+    Vectorized greedy: sort by marginal utility, prefix-sum the caps, give
+    each worker the clipped remainder.  O(M log M), jit-friendly.
+    """
+    T = params.T
+    w = Q * r + (E - theta) * params.p - R_server * params.xi * r
+    cap = jnp.minimum(jnp.minimum(jnp.full_like(r, T),
+                                  Q / jnp.maximum(r, 1e-12)),
+                      E / jnp.maximum(params.p, 1e-12))
+    cap = jnp.where((w > 0.0) & (Q > 0.0), jnp.maximum(cap, 0.0), 0.0)
+    order = jnp.argsort(-w)
+    cap_sorted = cap[order]
+    budget = T * L
+    before = jnp.cumsum(cap_sorted) - cap_sorted
+    alloc_sorted = jnp.clip(budget - before, 0.0, cap_sorted)
+    nu = jnp.zeros_like(cap).at[order].set(alloc_sorted)
+    return nu
+
+
+def schedule_slot(state: QueueState, params: SystemParams, obs: Observation,
+                  *, theta: jax.Array | None = None
+                  ) -> tuple[QueueState, Decisions]:
+    """One slot: closed-form P4–P7 decisions, then queue evolution."""
+    if theta is None:
+        theta = 0.5 * params.E_cap
+    y = _p4_auxiliary(state.H, obs.D, params.V)
+    d = _p5_admission(state.Q, state.H, obs.D)
+    e_store = _p6_energy(state.E, obs.E_H, theta)
+    nu = _p7_knapsack(state.Q, state.E, state.R_server, obs.r, obs.L,
+                      params, theta)
+    c = jnp.minimum(state.Q, obs.r * nu)                       # Eq. (6)
+    e_up = params.p * nu                                       # Eq. (9)
+    # work-conserving compute, capped by energy the battery can cover
+    f_energy_cap = jnp.maximum(state.E - e_up, 0.0) / jnp.maximum(
+        params.delta, 1e-12)
+    f = jnp.minimum(jnp.minimum(params.f_max, state.R), f_energy_cap)
+    e_com = f * params.delta                                   # Eq. (10)
+    new_state = step_queues(state, params, d=d, c=c, y=y, e_store=e_store,
+                            e_up=e_up, e_com=e_com, f=f,
+                            new_cycles=obs.new_cycles)
+    return new_state, Decisions(y=y, d=d, nu=nu, c=c, e_store=e_store,
+                                e_up=e_up, e_com=e_com, f=f)
+
+
+def run_horizon(state: QueueState, params: SystemParams, obs_seq: Observation
+                ) -> tuple[QueueState, Decisions]:
+    """Scan the scheduler over a (T_slots, …) observation sequence."""
+    def body(s, o):
+        s2, dec = schedule_slot(s, params, o)
+        return s2, dec
+    return jax.lax.scan(body, state, obs_seq)
+
+
+def jain_index(x: jax.Array) -> jax.Array:
+    """Jain fairness index in [1/M, 1]."""
+    num = jnp.sum(x) ** 2
+    den = x.shape[0] * jnp.sum(x * x)
+    return num / jnp.maximum(den, 1e-12)

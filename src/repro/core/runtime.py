@@ -1,0 +1,231 @@
+"""Two-stage epoch runtime: deadlines, completion simulation, decode weights.
+
+This is the host-side control loop of TSDCFL.  On a real cluster the
+completion times come from worker heartbeats; in this container they come
+from a ``CompletionTimeModel`` (shifted-exponential per-worker service times
++ fault probability — the standard straggler model matching the paper's
+latency analysis).  Everything downstream (slot plans, decode weights,
+utilization metrics) is identical either way.
+
+Also provides ``simulate_epoch_single_stage`` for the paper's baselines
+(CRS / FRS / uncoded) so the benchmarks compare all schemes under the same
+sampled worker behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.coding import (CodingScheme, StragglerPredictor,
+                               TwoStagePlanner, decode_weights)
+from repro.core.coded_step import SlotPlan, build_slot_plan, slot_weights
+
+__all__ = ["CompletionTimeModel", "EpochResult", "TwoStageRuntime",
+           "simulate_epoch_single_stage"]
+
+
+@dataclasses.dataclass
+class CompletionTimeModel:
+    """T_m = n_tasks / rate_m · (1 + Exp(noise)) · straggler_slowdown.
+
+    ``straggler_prob`` injects the paper's 1–2 stragglers/epoch (a worker is
+    slowed by ``straggler_slow``×); ``fault_prob`` models workers that never
+    return (node failure).
+    """
+    rates: np.ndarray                 # (M,) tasks per unit time
+    noise_scale: float = 0.2
+    fault_prob: float = 0.0
+    straggler_prob: float = 0.0
+    straggler_slow: float = 8.0
+
+    def sample(self, worker_ids: np.ndarray, n_tasks: np.ndarray,
+               rng: np.random.Generator) -> np.ndarray:
+        worker_ids = np.asarray(worker_ids, int)
+        n_tasks = np.asarray(n_tasks, np.float64)
+        base = n_tasks / self.rates[worker_ids]
+        noise = rng.exponential(self.noise_scale, size=len(worker_ids))
+        t = base * (1.0 + noise)
+        if self.straggler_prob > 0:
+            slow = rng.random(len(worker_ids)) < self.straggler_prob
+            t = np.where(slow, t * self.straggler_slow, t)
+        if self.fault_prob > 0:
+            t = np.where(rng.random(len(worker_ids)) < self.fault_prob,
+                         np.inf, t)
+        return t
+
+
+@dataclasses.dataclass
+class EpochResult:
+    plan: SlotPlan
+    weights: np.ndarray               # (M, n_slots) loss weights a_m·B[m,k]
+    time: float                       # simulated epoch wall-clock
+    useful_task_time: float
+    total_task_time: float
+    n_stragglers: int
+    stage2_triggered: bool
+    redundancy: float
+    executed_tasks: float = 0.0       # partition-copies actually computed
+    K: int = 0
+
+    M: int = 0
+
+    @property
+    def utilization(self) -> float:
+        """Useful compute-time / (M × epoch wall-clock)."""
+        denom = max(self.M, 1) * max(self.time, 1e-12)
+        return min(self.useful_task_time / denom, 1.0)
+
+    @property
+    def compute_efficiency(self) -> float:
+        """K / partition-copies executed — redundancy-adjusted efficiency
+        (the paper's computational-resource claim C3: redundant coded
+        copies and discarded partial work count as waste)."""
+        return min(self.K / max(self.executed_tasks, 1e-12), 1.0)
+
+
+class TwoStageRuntime:
+    """Per-epoch TSDCFL control: plan stage 1 → observe → plan stage 2."""
+
+    def __init__(self, M: int, K: int, M1: int, *, rates: np.ndarray,
+                 noise_scale: float = 0.2, fault_prob: float = 0.0,
+                 straggler_prob: float = 0.0, straggler_slow: float = 8.0,
+                 deadline_quantile: float = 0.9, n_slots: int = 0,
+                 seed: int = 0, select: str = "rotate"):
+        self.M, self.K, self.M1 = M, K, M1
+        self.planner = TwoStagePlanner(M, K, M1, select=select, seed=seed)
+        self.predictor = StragglerPredictor(M)
+        self.time_model = CompletionTimeModel(
+            np.asarray(rates, np.float64), noise_scale, fault_prob,
+            straggler_prob, straggler_slow)
+        self.deadline_quantile = deadline_quantile
+        self.n_slots = n_slots or None
+        self._rng = np.random.default_rng(seed + 1)
+
+    # ------------------------------------------------------------------ #
+    def run_epoch(self, epoch: int) -> EpochResult:
+        M, K = self.M, self.K
+        speeds = self.predictor.speeds()
+        st1 = self.planner.plan_stage1(epoch, speeds)
+        tasks1 = st1.scheme.copies_per_worker                 # (M1,)
+        t1 = self.time_model.sample(st1.workers, tasks1, self._rng)
+
+        # per-worker-aware deadline: quantile (over selected workers) of the
+        # predicted finish time of each worker's own share
+        per_task_q = self.predictor.time_quantile(0.9)[st1.workers]
+        pred_finish = per_task_q * np.maximum(tasks1, 1)
+        T_comp = float(np.quantile(pred_finish, self.deadline_quantile)
+                       * 1.05)
+        finished = t1 <= T_comp
+
+        # predictor update with whatever we observed by the deadline
+        obs = np.isfinite(t1)
+        self.predictor.update_times(st1.workers[obs & finished],
+                                    (t1 / np.maximum(tasks1, 1))[obs & finished])
+
+        s_hat = self.predictor.predict_s(
+            n_active=M - int(finished.sum()), s_min=1)
+        st2 = self.planner.plan_stage2(st1, finished, s_hat, speeds)
+
+        schemes = []
+        decode_w_global = np.zeros(M)
+        # stage-1 finishers: uncoded contribution, weight 1
+        fin_rows = np.flatnonzero(finished)
+        if len(fin_rows):
+            B_fin = st1.scheme.B[fin_rows]
+            schemes.append(CodingScheme(
+                B=B_fin, s=0, kind="uncoded",
+                workers=st1.workers[fin_rows],
+                partitions=st1.partitions))
+            decode_w_global[st1.workers[fin_rows]] = 1.0
+
+        stage1_time = float(min(np.max(t1[finished], initial=0.0), T_comp)) \
+            if finished.any() else T_comp
+        if not finished.all():
+            stage1_time = T_comp
+        total_task_time = float(np.sum(np.minimum(t1, T_comp)))
+        useful = float(np.sum(t1[finished]))
+        # partition-copies executed by the deadline (partial work counts)
+        executed = float(np.sum(tasks1 * np.minimum(t1, T_comp)
+                                / np.maximum(t1, 1e-12)))
+        time = stage1_time
+        n_straggle = 0
+
+        if st2.triggered:
+            scheme2 = st2.scheme
+            tasks2 = scheme2.copies_per_worker
+            t2 = self.time_model.sample(st2.active_workers, tasks2,
+                                        self._rng)
+            # synchronous semantics: wait for the fastest (n_active - s)
+            n_active = scheme2.M
+            s = scheme2.s
+            order = np.argsort(np.where(np.isfinite(t2), t2, np.inf))
+            need = n_active - s
+            alive = np.zeros(n_active, bool)
+            alive[order[:need]] = True
+            alive &= np.isfinite(t2)
+            stage2_time = float(np.max(t2[alive], initial=0.0))
+            a2 = decode_weights(scheme2, alive)
+            decode_w_global[st2.active_workers] = a2
+            schemes.append(scheme2)
+            n_straggle = int(n_active - alive.sum())
+            time = stage1_time + stage2_time
+            total_task_time += float(np.sum(np.minimum(
+                t2, np.where(np.isfinite(t2), t2, stage2_time))))
+            t2f = np.where(np.isfinite(t2), t2, np.inf)
+            executed += float(np.sum(
+                tasks2 * np.minimum(t2f, stage2_time)
+                / np.maximum(t2f, 1e-12)))
+            # useful work: alive workers' coded tasks that enter the decode
+            useful += float(np.sum(t2[alive]))
+            self.predictor.update_times(
+                st2.active_workers[alive],
+                (t2 / np.maximum(tasks2, 1))[alive])
+
+        self.predictor.update_straggler_count(n_straggle)
+        plan = build_slot_plan(schemes, M, self.n_slots)
+        w = slot_weights(plan, decode_w_global)
+        red = plan.slot_coeff[plan.slot_partition >= 0].size / max(K, 1)
+        return EpochResult(plan=plan, weights=w, time=time,
+                           useful_task_time=useful,
+                           total_task_time=total_task_time,
+                           n_stragglers=n_straggle,
+                           stage2_triggered=st2.triggered, redundancy=red,
+                           executed_tasks=executed, K=K, M=M)
+
+
+# --------------------------------------------------------------------- #
+def simulate_epoch_single_stage(scheme: CodingScheme,
+                                time_model: CompletionTimeModel,
+                                rng: np.random.Generator,
+                                wait_for: Optional[int] = None) -> dict:
+    """Baseline epoch (CRS/FRS/uncoded): all M workers start together.
+
+    Returns decode weights, epoch time (wait for M-s fastest), utilization
+    inputs — used by benchmarks/paper_iteration_time.py.
+    """
+    M = scheme.M
+    tasks = scheme.copies_per_worker
+    t = time_model.sample(np.arange(M), tasks, rng)
+    need = wait_for if wait_for is not None else M - scheme.s
+    order = np.argsort(np.where(np.isfinite(t), t, np.inf))
+    alive = np.zeros(M, bool)
+    alive[order[:need]] = True
+    alive &= np.isfinite(t)
+    time = float(np.max(t[alive], initial=0.0))
+    try:
+        a = decode_weights(scheme, alive)
+        ok = True
+    except ValueError:
+        a = np.zeros(M)
+        ok = False
+        time = float(np.max(np.where(np.isfinite(t), t, 0.0)))
+    useful = float(np.sum(t[alive]))
+    total = float(np.sum(np.minimum(np.where(np.isfinite(t), t, time), time)))
+    tf = np.where(np.isfinite(t), t, np.inf)
+    executed = float(np.sum(tasks * np.minimum(tf, time)
+                            / np.maximum(tf, 1e-12)))
+    return {"decode_w": a, "time": time, "alive": alive, "ok": ok,
+            "useful_task_time": useful, "total_task_time": total,
+            "redundancy": scheme.redundancy, "executed_tasks": executed}

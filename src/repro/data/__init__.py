@@ -1,0 +1,7 @@
+from repro.data.batches import batch_shapes, synthetic_batch
+from repro.data.pipeline import (PartitionedDataset,
+                                 SyntheticClassificationDataset,
+                                 SyntheticLMDataset)
+
+__all__ = ["batch_shapes", "synthetic_batch", "PartitionedDataset",
+           "SyntheticClassificationDataset", "SyntheticLMDataset"]

@@ -1,0 +1,56 @@
+"""Batch construction shared by smoke tests, drivers, and the dry-run.
+
+``batch_shapes`` is the single source of truth for model input signatures;
+``synthetic_batch`` materializes concrete deterministic arrays (CPU tests /
+examples) while ``launch.dryrun`` builds ShapeDtypeStructs from the same
+shapes (no allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["batch_shapes", "synthetic_batch"]
+
+
+def batch_shapes(cfg: ModelConfig, B: int, S: int, kind: str) -> dict:
+    """name -> (shape, dtype) for the given step kind (train|prefill)."""
+    f = jnp.dtype(cfg.compute_dtype)
+    shapes = {}
+    if cfg.frontend == "audio":
+        shapes["frames"] = ((B, S, cfg.d_model), f)
+    elif cfg.frontend == "vision":
+        P = cfg.n_patches
+        shapes["patches"] = ((B, P, cfg.d_model), f)
+        shapes["tokens"] = ((B, S - P), jnp.int32)
+    else:
+        shapes["tokens"] = ((B, S), jnp.int32)
+    if kind == "train":
+        shapes["labels"] = ((B, S), jnp.int32)
+        shapes["weights"] = ((B, S), jnp.float32)
+    return shapes
+
+
+def synthetic_batch(cfg: ModelConfig, B: int, S: int, kind: str,
+                    seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    batch = {}
+    for name, (shape, dtype) in batch_shapes(cfg, B, S, kind).items():
+        if dtype == jnp.int32:
+            batch[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab, size=shape), jnp.int32)
+        elif name == "weights":
+            w = np.ones(shape, np.float32)
+            if cfg.frontend == "vision":
+                w[:, :cfg.n_patches] = 0.0      # ignore patch positions
+                w = w / w.sum()
+            else:
+                w = w / w.size
+            batch[name] = jnp.asarray(w)
+        else:
+            batch[name] = jnp.asarray(
+                rng.standard_normal(shape) * 0.02, dtype)
+    return batch

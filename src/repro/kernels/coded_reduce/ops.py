@@ -1,0 +1,19 @@
+"""Jit'd wrapper for the coded decode-reduce kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .coded_reduce import coded_reduce_pallas
+from .ref import coded_reduce_ref
+
+__all__ = ["coded_reduce_op", "coded_reduce_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def coded_reduce_op(g, w, *, block_d: int = 512,
+                    interpret: bool | None = None):
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    return coded_reduce_pallas(g, w, block_d=block_d, interpret=interp)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the coded decode-reduce kernel."""
+import jax.numpy as jnp
+
+__all__ = ["coded_reduce_ref"]
+
+
+def coded_reduce_ref(g, w):
+    """g: (n_slots, D) per-slot coded gradients; w: (n_slots,) decode
+    weights -> (D,) combined gradient  Σ_s w_s · g_s  in f32."""
+    return jnp.einsum("sd,s->d", g.astype(jnp.float32),
+                      w.astype(jnp.float32))

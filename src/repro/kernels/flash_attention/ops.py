@@ -1,0 +1,40 @@
+"""Jit'd public wrapper for the flash-attention kernel (GQA-aware)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention_op", "attention_ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: bool | None = None):
+    """GQA attention: q (B,S,KV,G,D), k/v (B,S,KV,D) -> (B,S,KV,G,D).
+
+    Folds GQA groups into the head axis (kv broadcast) and calls the TPU
+    kernel; interpret mode auto-enables off-TPU so the same call validates
+    on CPU.
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    B, S, KV, G, D = q.shape
+    qh = q.transpose(0, 2, 3, 1, 4).reshape(B, KV * G, S, D)
+    kh = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, KV, G, S, D)).reshape(B, KV * G, S, D)
+    vh = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, KV, G, S, D)).reshape(B, KV * G, S, D)
+    out = flash_attention_pallas(qh, kh, vh, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interp)
+    return out.reshape(B, KV, G, S, D).transpose(0, 3, 1, 2, 4)

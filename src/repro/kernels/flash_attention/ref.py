@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D); plain softmax attention."""
+    B, H, S, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    idx = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= idx[:, None] >= idx[None, :]
+    if window:
+        mask &= (idx[:, None] - idx[None, :]) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

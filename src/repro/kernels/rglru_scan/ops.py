@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .rglru_scan import rglru_scan_pallas
+from .ref import rglru_ref
+
+__all__ = ["rglru_scan_op", "rglru_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_d",
+                                             "interpret"))
+def rglru_scan_op(a, b, *, block_s: int = 256, block_d: int = 128,
+                  interpret: bool | None = None):
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    return rglru_scan_pallas(a, b, block_s=block_s, block_d=block_d,
+                             interpret=interp)

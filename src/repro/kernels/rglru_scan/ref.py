@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the RG-LRU linear-recurrence scan kernel."""
+import jax.numpy as jnp
+
+__all__ = ["rglru_ref"]
+
+
+def rglru_ref(a, b, h0=None):
+    """h_t = a_t ⊙ h_{t-1} + b_t, sequential reference.
+
+    a, b: (B, S, D); h0: (B, D) or None. Returns (h (B,S,D), h_last (B,D)).
+    """
+    B, S, D = a.shape
+    h = jnp.zeros((B, D), jnp.float32) if h0 is None else h0.astype(
+        jnp.float32)
+    out = []
+    for t in range(S):
+        h = a[:, t].astype(jnp.float32) * h + b[:, t].astype(jnp.float32)
+        out.append(h)
+    return jnp.stack(out, axis=1).astype(a.dtype), h

@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the RWKV6 WKV kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .rwkv6_wkv import wkv_pallas
+from .ref import wkv_ref
+
+__all__ = ["wkv_op", "wkv_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_op(r, k, v, w, u, *, chunk: int = 32, interpret: bool | None = None):
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    return wkv_pallas(r, k, v, w, u, chunk=chunk, interpret=interp)

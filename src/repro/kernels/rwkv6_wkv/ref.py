@@ -1,0 +1,4 @@
+"""Pure-jnp oracle for the RWKV6 WKV kernel (sequential recurrence)."""
+from repro.models.rwkv6 import wkv_sequential as wkv_ref
+
+__all__ = ["wkv_ref"]

@@ -1,0 +1,108 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape, mesh)`` returns the sharded SDS pytrees the
+dry-run lowers against: (params, opt_state, batch) for training cells,
+(params, batch) for prefill, (params, tokens, caches, pos) for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SHAPES, get_config
+from repro.data.batches import batch_shapes
+from repro.launch.mesh import batch_axes, data_shards
+from repro.launch.sharding import (batch_shardings, cache_shardings,
+                                   param_shardings)
+from repro.models import transformer as tfm
+from repro.optim import OptState
+
+__all__ = ["params_specs", "opt_state_specs", "batch_specs", "decode_specs",
+           "input_specs", "input_specs_for"]
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def params_specs(cfg: ModelConfig, mesh, layout: str = "tp") -> tuple:
+    """(params SDS pytree, shardings pytree)."""
+    specs = tfm.model_specs(cfg)
+    shardings = param_shardings(cfg, mesh, layout)
+    dt = jnp.dtype(cfg.param_dtype)
+    sds = jax.tree.map(
+        lambda s, sh: _sds(s.shape, dt, sh), specs, shardings,
+        is_leaf=lambda x: isinstance(x, tfm.Spec))
+    return sds, shardings
+
+
+def opt_state_specs(cfg: ModelConfig, mesh, params_sds) -> OptState:
+    sdt = jnp.dtype(cfg.opt_state_dtype)
+    rep = NamedSharding(mesh, P())
+    moments = jax.tree.map(lambda p: _sds(p.shape, sdt, p.sharding),
+                           params_sds)
+    return OptState(step=_sds((), jnp.int32, rep), m=moments, v=moments)
+
+
+def batch_specs(cfg: ModelConfig, mesh, B: int, S: int, kind: str,
+                layout: str = "tp") -> dict:
+    shapes = batch_shapes(cfg, B, S, kind)
+    shardings = batch_shardings(cfg, mesh, shapes, layout)
+    return {name: _sds(shape, dtype, shardings[name])
+            for name, (shape, dtype) in shapes.items()}
+
+
+def decode_specs(cfg: ModelConfig, mesh, B: int, cap: int) -> tuple:
+    """(tokens SDS, caches SDS, pos SDS)."""
+    cache_shapes = jax.eval_shape(lambda: tfm.init_cache(cfg, B, cap))
+    shardings = cache_shardings(cfg, mesh, B, cap)
+    caches = jax.tree.map(lambda s, sh: _sds(s.shape, s.dtype, sh),
+                          cache_shapes, shardings)
+    b_ax = batch_axes(mesh)
+    n_b = int(np.prod([mesh.shape[a] for a in b_ax])) if b_ax else 1
+    tok_spec = P(b_ax, None) if (n_b > 1 and B % n_b == 0) else P(None, None)
+    tokens = _sds((B, 1), jnp.int32, NamedSharding(mesh, tok_spec))
+    pos = _sds((), jnp.int32, NamedSharding(mesh, P()))
+    return tokens, caches, pos
+
+
+def input_specs(arch: str, shape_name: str, mesh) -> dict:
+    """Everything the dry-run needs to lower one cell."""
+    return input_specs_for(get_config(arch), SHAPES[shape_name], mesh)
+
+
+def input_specs_for(cfg: ModelConfig, shape, mesh, layout: str = "tp"
+                    ) -> dict:
+    from repro.launch.sharding import rules_for
+    params, _ = params_specs(cfg, mesh, layout)
+    b_ax = rules_for(cfg, mesh, layout)["batch"]
+    n_b = int(np.prod([mesh.shape[a] for a in b_ax])) if b_ax else 1
+    dp = n_b if shape.global_batch % max(n_b, 1) == 0 else data_shards(mesh)
+    moe_spec = None
+    if cfg.n_experts:
+        if cfg.moe_shard == "expert" and "model" in mesh.axis_names \
+                and cfg.n_experts % mesh.shape["model"] == 0:
+            non_model = tuple(a for a in b_ax if a != "model") or None
+            moe_spec = P(non_model, "model", None, None)
+        else:
+            moe_spec = P(b_ax, None, None, None)
+    head_spec = None
+    if "model" in mesh.axis_names and cfg.vocab % mesh.shape["model"] == 0:
+        head_spec = P(None, "model")
+    out = {"cfg": cfg, "shape": shape, "params": params,
+           "dp_shards": dp, "batch_axes": b_ax, "moe_buffer_spec": moe_spec,
+           "head_spec": head_spec}
+    if shape.kind == "train":
+        out["opt_state"] = opt_state_specs(cfg, mesh, params)
+        out["batch"] = batch_specs(cfg, mesh, shape.global_batch,
+                                   shape.seq_len, "train", layout)
+    elif shape.kind == "prefill":
+        out["batch"] = batch_specs(cfg, mesh, shape.global_batch,
+                                   shape.seq_len, "prefill", layout)
+    else:  # decode
+        tokens, caches, pos = decode_specs(cfg, mesh, shape.global_batch,
+                                           shape.seq_len)
+        out.update(tokens=tokens, caches=caches, pos=pos)
+    return out

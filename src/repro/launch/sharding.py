@@ -1,0 +1,190 @@
+"""Logical-axis sharding rules (MaxText-style) + cache/batch shardings.
+
+Parameters carry *logical* axis names (models/common.Spec); this module maps
+them to mesh axes.  Default layout:
+
+  embed        -> "data"    (FSDP: params+optimizer 2-D sharded; the
+                             per-layer weight all-gather is the FSDP
+                             prefetch, visible in the collective roofline)
+  qkv/kv/mlp/vocab -> "model"  (tensor parallel)
+  experts      -> "model"   (EP; 'ffn' mode swaps to expert_mlp -> "model")
+  heads        -> "model"   (RWKV wkv heads)
+  layers/scan stacks -> replicated leading dim
+
+Caches: batch -> ("pod","data") when divisible, else the long-context path
+shards the KV sequence dim over "data" (GSPMD then emits the flash-decode
+partial-softmax collectives — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import batch_axes
+
+__all__ = ["rules_for", "param_shardings", "batch_shardings",
+           "cache_shardings", "logical_to_spec"]
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, layout: str = "tp") -> dict:
+    """Sharding layouts:
+
+    'tp'   — baseline: batch→(pod,data), tensor-parallel over 'model'
+             (weights 2-D sharded: embed→data FSDP + op dims→model).
+    'fsdp' — beyond-paper §Perf layout: batch over BOTH axes
+             (pod,data,model); weights stay 2-D sharded and are all-gathered
+             per layer (ZeRO-3).  Trades the per-layer TP activation
+             all-reduce (≈6×act bytes) for a per-layer weight all-gather
+             (params/layer bytes) — a big win for the train cells where
+             per-device token counts are large (EXPERIMENTS.md §Perf).
+    """
+    b_ax = batch_axes(mesh)
+    if layout == "fsdp" and "model" in mesh.axis_names:
+        b_ax = b_ax + ("model",)
+    rules = {
+        "batch": b_ax,
+        "embed": "data",
+        "vocab": "model",
+        "qkv": "model",
+        "kv": "model",
+        "mlp": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "heads": "model",
+        "rnn": "model",
+        "rnn_heads": None,
+        "layers": None,
+    }
+    if layout == "fsdp":
+        # recurrent-block projections: 'model' on the rnn dim would force
+        # per-layer activation resharding against the 2-axis batch (profiled
+        # at ~25 GB/layer on recurrentgemma — §Perf); keep activations
+        # batch-sharded and ZeRO the weights via the embed dim instead.
+        rules["rnn"] = None
+    if cfg.n_experts and cfg.moe_shard == "ffn":
+        rules["experts"] = None
+        # TP layout shards the (tiny) per-expert FFN dim; under FSDP that
+        # conflicts with the 2-axis batch sharding (GSPMD re-gathers the
+        # 8x-token dispatch buffer over 'model') — pure ZeRO-sharded expert
+        # weights are ~13x cheaper (§Perf granite iteration 2).
+        rules["expert_mlp"] = None if layout == "fsdp" else "model"
+    # small recurrent gate blocks stay replicated; in/out projections shard
+    return rules
+
+
+def logical_to_spec(axes: tuple, rules: dict, mesh: Mesh) -> P:
+    parts = []
+    for ax in axes:
+        r = rules.get(ax, None) if ax is not None else None
+        if r is None:
+            parts.append(None)
+        elif isinstance(r, tuple):
+            parts.append(tuple(a for a in r if a in mesh.axis_names) or None)
+        else:
+            parts.append(r if r in mesh.axis_names else None)
+    return P(*parts)
+
+
+def _fit_spec_to_shape(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop mesh axes whose extent doesn't evenly divide the dim (jit input
+    shardings require exact division — e.g. odd vocabs 49155/92553/504)."""
+    parts = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            parts.append(None)
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        extent = int(np.prod([mesh.shape[a] for a in axs]))
+        parts.append(ax if dim % extent == 0 else None)
+    return P(*parts)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, layout: str = "tp") -> Any:
+    from repro.models.transformer import model_specs
+    from repro.models.common import Spec
+    rules = rules_for(cfg, mesh, layout)
+    specs = model_specs(cfg)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _fit_spec_to_shape(
+            logical_to_spec(s.axes, rules, mesh), s.shape, mesh)),
+        specs, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, shapes: dict,
+                    layout: str = "tp") -> dict:
+    """shapes: name -> (shape, dtype) from data.batches.batch_shapes."""
+    b_ax = rules_for(cfg, mesh, layout)["batch"]
+    n_b = int(np.prod([mesh.shape[a] for a in b_ax])) if b_ax else 1
+    out = {}
+    for name, (shape, dtype) in shapes.items():
+        if shape[0] % max(n_b, 1) == 0 and n_b > 1:
+            spec = P(b_ax, *([None] * (len(shape) - 1)))
+        else:
+            spec = P(*([None] * len(shape)))
+        out[name] = NamedSharding(mesh, spec)
+    return out
+
+
+def _kv_cache_spec(cfg, mesh, B, cap, ring: bool) -> P:
+    """(R, B, cap, KV, hd) cache partition spec.
+
+    head_dim (not kv-head count) takes the model axis: it is divisible by
+    16 for every assigned arch, whereas kv=8 would violate the even-divide
+    rule for jit input shardings.  Score/value einsums contract hd, which
+    GSPMD turns into small psum(scores) — the head-dim-parallel flash
+    decode.
+    """
+    b_ax = batch_axes(mesh)
+    n_b = int(np.prod([mesh.shape[a] for a in b_ax])) if b_ax else 1
+    n_model = mesh.shape.get("model", 1)
+    hd_ax = "model" if ("model" in mesh.axis_names
+                        and cfg.head_dim % n_model == 0) else None
+    if B % max(n_b, 1) == 0 and n_b > 1:
+        return P(None, b_ax, None, None, hd_ax)
+    if not ring and "data" in mesh.axis_names \
+            and cap % mesh.shape["data"] == 0:
+        # long-context: shard the sequence dimension (flash-decode path)
+        return P(None, None, "data", None, hd_ax)
+    return P(None, None, None, None, hd_ax)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, B: int, cap: int) -> Any:
+    """Sharding pytree matching transformer.init_cache(cfg, B, cap)."""
+    from repro.models.transformer import group_layout
+    b_ax = batch_axes(mesh)
+    n_b = int(np.prod([mesh.shape[a] for a in b_ax])) if b_ax else 1
+    batched = B % max(n_b, 1) == 0 and n_b > 1
+    bspec = b_ax if batched else None
+    head_ax = "model" if "model" in mesh.axis_names else None
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    caches = []
+    for g in group_layout(cfg):
+        unit = {}
+        for j, (mixer, ffn) in enumerate(g.kinds):
+            if mixer in ("attn", "local"):
+                ring = mixer == "local" and bool(cfg.window) \
+                    and cfg.window < cap
+                spec = _kv_cache_spec(cfg, mesh, B, cap, ring)
+                e = {"mix": {"k": ns(spec), "v": ns(spec)}}
+            elif mixer == "rec":
+                e = {"mix": {"h": ns(P(None, bspec, None, None)),
+                             "conv": ns(P(None, bspec, None, None))}}
+            elif mixer == "rwkv":
+                H = cfg.d_model // cfg.rwkv_head_dim
+                n_model = mesh.shape.get("model", 1)
+                h_ax = head_ax if H % max(n_model, 1) == 0 else None
+                e = {"mix": {"S": ns(P(None, bspec, h_ax, None, None)),
+                             "tm": ns(P(None, bspec, None))},
+                     "ffn": {"cm": ns(P(None, bspec, None))}}
+            else:
+                raise ValueError(mixer)
+            unit[f"l{j}"] = e
+        caches.append(unit)
+    return caches

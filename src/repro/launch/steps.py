@@ -1,0 +1,56 @@
+"""Step builders shared by the dry-run, the trainer, and the server."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.optim import adamw, clip_by_global_norm
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step",
+           "make_optimizer"]
+
+
+def make_optimizer(cfg: ModelConfig, lr: float = 3e-4):
+    return adamw(lr=lr, b1=0.9, b2=0.95, weight_decay=0.1,
+                 state_dtype=cfg.opt_state_dtype)
+
+
+def make_train_step(cfg: ModelConfig, dp_shards: int, *, lr: float = 3e-4,
+                    clip: float = 1.0,
+                    grad_transform: Callable | None = None) -> tuple:
+    """Returns (step_fn, optimizer).  step: (params, opt, batch) -> ..."""
+    opt = make_optimizer(cfg, lr)
+
+    def loss_fn(params, batch):
+        return tfm.loss_fn(params, batch, cfg, dp_shards=dp_shards)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        gn = jnp.zeros(())
+        if clip:
+            grads, gn = clip_by_global_norm(grads, clip)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gn}
+
+    return step, opt
+
+
+def make_prefill_step(cfg: ModelConfig, dp_shards: int) -> Callable:
+    def step(params, batch):
+        logits, caches, pos = tfm.prefill(params, batch, cfg,
+                                          dp_shards=dp_shards)
+        return logits, caches
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, dp_shards: int) -> Callable:
+    def step(params, tokens, caches, pos):
+        return tfm.decode_step(params, tokens, caches, pos, cfg,
+                               dp_shards=dp_shards)
+    return step

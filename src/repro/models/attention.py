@@ -1,0 +1,304 @@
+"""Attention: chunked flash attention in pure JAX (XLA path) + decode path.
+
+This is the portable implementation used by the multi-pod dry-run and the
+CPU tests; on real TPUs the Pallas kernel (``repro.kernels.flash_attention``)
+is swapped in via ``attn_impl='pallas'``.  The chunking here is *exact*
+(online softmax) and FLOP-tight: the causal outer loop is unrolled over
+query chunks so no masked-out kv chunk is ever touched (triangle schedule),
+and sliding-window layers only visit kv chunks inside the band.
+
+Layouts:  q (B, S, KVH, G, D) — GQA groups folded next to kv heads;
+          k/v (B, S, KVH, D).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention", "decode_attention", "flash_attention_vjp"]
+
+_NEG_INF = -1e30
+_USE_CUSTOM_VJP = True   # flash-style backward (recompute, no residual
+                         # stacks from the inner kv scans) — §Perf memory
+
+
+def _chunk_attend(q, k, v, m, l, acc, q_pos0, k_pos0, *, causal: bool,
+                  window: int):
+    """Online-softmax update for one (q-chunk, kv-chunk) tile.
+
+    q: (B,KV,G,Cq,D)  k/v: (B,Ckv,KV,D)  m,l: (B,KV,G,Cq)  acc like q.
+    """
+    Cq, Ckv = q.shape[-2], k.shape[1]
+    s = jnp.einsum("bkgqd,bskd->bkgqs", q, k,
+                   preferred_element_type=jnp.float32)
+    if causal or window:
+        qp = q_pos0 + jnp.arange(Cq)
+        kp = k_pos0 + jnp.arange(Ckv)
+        ok = jnp.ones((Cq, Ckv), bool)
+        if causal:
+            ok &= qp[:, None] >= kp[None, :]
+        if window:
+            ok &= (qp[:, None] - kp[None, :]) < window
+        s = jnp.where(ok[None, None, None], s, _NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqs,bskd->bkgqd", p, v,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc * corr[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def _kv_band(qi: int, q_chunk: int, kv_chunk: int, S: int, causal: bool,
+             window: int) -> tuple:
+    """Static kv-chunk index range [j0, j1) touched by query chunk qi."""
+    q_pos0 = qi * q_chunk
+    kv_end = q_pos0 + q_chunk if causal else S
+    kv_start = 0
+    if window:
+        kv_start = max(0, q_pos0 - ((window + kv_chunk - 1) // kv_chunk)
+                       * kv_chunk)
+    j0 = kv_start // kv_chunk
+    j1 = (kv_end + kv_chunk - 1) // kv_chunk
+    return j0, j1
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Exact chunked attention.
+
+    Args:
+      q: (B, S, KVH, G, D); k, v: (B, S, KVH, D).
+      causal: causal mask; window>0 adds a sliding window (local attention).
+    Returns: (B, S, KVH, G, D) in q.dtype.
+    """
+    if _USE_CUSTOM_VJP:
+        return flash_attention_vjp(q, k, v, causal, window,
+                                   min(q_chunk, q.shape[1]),
+                                   min(kv_chunk, q.shape[1]))
+    return _flash_attention_nochunkgrad(q, k, v, causal=causal,
+                                        window=window, q_chunk=q_chunk,
+                                        kv_chunk=kv_chunk, scale=scale)
+
+
+def _flash_attention_nochunkgrad(q, k, v, *, causal=True, window=0,
+                                 q_chunk=1024, kv_chunk=1024, scale=None):
+    B, S, KV, G, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+    nq = S // q_chunk
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 3, 1, 4)  # B,KV,G,S,D
+    out_chunks = []
+    for qi in range(nq):                       # static triangle schedule
+        q_pos0 = qi * q_chunk
+        q_tile = jax.lax.slice_in_dim(qf, q_pos0, q_pos0 + q_chunk, axis=3)
+        if causal:
+            kv_end = q_pos0 + q_chunk
+        else:
+            kv_end = S
+        if window:
+            kv_start = max(0, q_pos0 - ((window + kv_chunk - 1) // kv_chunk)
+                           * kv_chunk)
+        else:
+            kv_start = 0
+        kv_start = (kv_start // kv_chunk) * kv_chunk
+        n_kv = (kv_end - kv_start + kv_chunk - 1) // kv_chunk
+
+        m0 = jnp.full((B, KV, G, q_chunk), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, D), jnp.float32)
+
+        def body(carry, j, q_tile=q_tile, q_pos0=q_pos0, kv_start=kv_start):
+            m, l, acc = carry
+            k_pos0 = kv_start + j * kv_chunk
+            k_tile = jax.lax.dynamic_slice_in_dim(k, k_pos0, kv_chunk, axis=1)
+            v_tile = jax.lax.dynamic_slice_in_dim(v, k_pos0, kv_chunk, axis=1)
+            m, l, acc = _chunk_attend(q_tile, k_tile, v_tile, m, l, acc,
+                                      q_pos0, k_pos0, causal=causal,
+                                      window=window)
+            return (m, l, acc), None
+
+        from repro.models.settings import unroll_enabled
+        if n_kv == 1:
+            (m, l, acc), _ = body((m0, l0, a0), jnp.asarray(0))
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                body, (m0, l0, a0), jnp.arange(n_kv),
+                unroll=n_kv if unroll_enabled() else 1)
+        out_chunks.append(acc / jnp.maximum(l, 1e-30)[..., None])
+    out = jnp.concatenate(out_chunks, axis=3)   # B,KV,G,S,D
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
+# ===================================================================== #
+# custom-VJP flash attention: fwd saves only (q, k, v, out, lse); bwd
+# recomputes tiles (two-pass: dq pass, then dk/dv pass) — no residual
+# stacks from the inner kv loops, which cut the train-cell temp memory
+# (EXPERIMENTS.md §Perf memory note).
+# ===================================================================== #
+import functools as _ft
+
+
+def _fa_tiles(qf, k, v, S, q_chunk, kv_chunk, causal, window):
+    """Forward tiles: returns (out f32 (B,KV,G,S,D), lse (B,KV,G,S))."""
+    B, KV, G, _, D = qf.shape
+    outs, lses = [], []
+    nq = S // q_chunk
+    for qi in range(nq):
+        q_pos0 = qi * q_chunk
+        q_tile = jax.lax.slice_in_dim(qf, q_pos0, q_pos0 + q_chunk, axis=3)
+        j0, j1 = _kv_band(qi, q_chunk, kv_chunk, S, causal, window)
+        m = jnp.full((B, KV, G, q_chunk), _NEG_INF, jnp.float32)
+        l = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        acc = jnp.zeros((B, KV, G, q_chunk, D), jnp.float32)
+
+        def body(carry, j, q_tile=q_tile, q_pos0=q_pos0):
+            m, l, acc = carry
+            k_pos0 = j * kv_chunk
+            k_t = jax.lax.dynamic_slice_in_dim(k, k_pos0, kv_chunk, axis=1)
+            v_t = jax.lax.dynamic_slice_in_dim(v, k_pos0, kv_chunk, axis=1)
+            return _chunk_attend(q_tile, k_t, v_t, m, l, acc, q_pos0,
+                                 k_pos0, causal=causal, window=window), None
+
+        from repro.models.settings import unroll_enabled
+        n_j = j1 - j0
+        if n_j == 1:
+            (m, l, acc), _ = body((m, l, acc), jnp.asarray(j0))
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                body, (m, l, acc), jnp.arange(j0, j1),
+                unroll=n_j if unroll_enabled() else 1)
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+        lses.append(m + jnp.log(jnp.maximum(l, 1e-30)))
+    return jnp.concatenate(outs, axis=3), jnp.concatenate(lses, axis=3)
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_vjp(q, k, v, causal, window, q_chunk, kv_chunk):
+    out, _ = _fa_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out
+
+
+def _fa_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk):
+    B, S, KV, G, D = q.shape
+    scale = D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 3, 1, 4)
+    out, lse = _fa_tiles(qf, k, v, S, q_chunk, kv_chunk, causal, window)
+    return (out.transpose(0, 3, 1, 2, 4).astype(q.dtype),
+            (q, k, v, out.astype(q.dtype), lse))
+
+
+def _fa_fwd(q, k, v, causal, window, q_chunk, kv_chunk):
+    out, res = _fa_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out, res
+
+
+def _fa_bwd(causal, window, q_chunk, kv_chunk, res, do):
+    q, k, v, out_t, lse = res          # out_t: (B,KV,G,S,D) in q.dtype
+    B, S, KV, G, D = q.shape
+    scale = D ** -0.5
+    qf = q.astype(jnp.float32).transpose(0, 2, 3, 1, 4)        # B,KV,G,S,D
+    dof = do.astype(jnp.float32).transpose(0, 2, 3, 1, 4)
+    outf = out_t.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # Dvec[b,kv,g,s] = rowsum(do * out)
+    Dvec = jnp.sum(dof * outf, axis=-1)
+    nq, nk = S // q_chunk, S // kv_chunk
+
+    def tile_grads(qi, j):
+        """Recompute tile (qi, j); return (ds, p) f32 tiles + slices."""
+        q_pos0, k_pos0 = qi * q_chunk, j * kv_chunk
+        q_t = jax.lax.slice_in_dim(qf, q_pos0, q_pos0 + q_chunk, axis=3)
+        k_t = jax.lax.slice_in_dim(kf, k_pos0, k_pos0 + kv_chunk, axis=1)
+        v_t = jax.lax.slice_in_dim(vf, k_pos0, k_pos0 + kv_chunk, axis=1)
+        do_t = jax.lax.slice_in_dim(dof, q_pos0, q_pos0 + q_chunk, axis=3)
+        lse_t = jax.lax.slice_in_dim(lse, q_pos0, q_pos0 + q_chunk, axis=3)
+        D_t = jax.lax.slice_in_dim(Dvec, q_pos0, q_pos0 + q_chunk, axis=3)
+        s = jnp.einsum("bkgqd,bskd->bkgqs", q_t * scale, k_t,
+                       preferred_element_type=jnp.float32)
+        if causal or window:
+            qp = q_pos0 + jnp.arange(q_chunk)
+            kp = k_pos0 + jnp.arange(kv_chunk)
+            ok = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                ok &= qp[:, None] >= kp[None, :]
+            if window:
+                ok &= (qp[:, None] - kp[None, :]) < window
+            s = jnp.where(ok[None, None, None], s, _NEG_INF)
+        p = jnp.exp(s - lse_t[..., None])
+        dp = jnp.einsum("bkgqd,bskd->bkgqs", do_t, v_t,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - D_t[..., None])
+        return p, ds, k_t, v_t, q_t, do_t
+
+    # pass 1: dq per q-chunk
+    dq_chunks = []
+    for qi in range(nq):
+        j0, j1 = _kv_band(qi, q_chunk, kv_chunk, S, causal, window)
+        dq_acc = jnp.zeros((B, KV, G, q_chunk, D), jnp.float32)
+        for j in range(j0, j1):
+            p, ds, k_t, _, _, _ = tile_grads(qi, j)
+            dq_acc = dq_acc + jnp.einsum(
+                "bkgqs,bskd->bkgqd", ds, k_t,
+                preferred_element_type=jnp.float32) * scale
+        dq_chunks.append(dq_acc)
+    dq = jnp.concatenate(dq_chunks, axis=3).transpose(0, 3, 1, 2, 4)
+
+    # pass 2: dk/dv per kv-chunk
+    dk_chunks, dv_chunks = [], []
+    for j in range(nk):
+        dk_acc = jnp.zeros((B, kv_chunk, KV, D), jnp.float32)
+        dv_acc = jnp.zeros((B, kv_chunk, KV, D), jnp.float32)
+        for qi in range(nq):
+            j0, j1 = _kv_band(qi, q_chunk, kv_chunk, S, causal, window)
+            if not (j0 <= j < j1):
+                continue
+            p, ds, _, _, q_t, do_t = tile_grads(qi, j)
+            # sum over G (grouped queries share kv heads)
+            dv_acc = dv_acc + jnp.einsum(
+                "bkgqs,bkgqd->bskd", p, do_t,
+                preferred_element_type=jnp.float32)
+            dk_acc = dk_acc + jnp.einsum(
+                "bkgqs,bkgqd->bskd", ds, q_t,
+                preferred_element_type=jnp.float32) * scale
+        dk_chunks.append(dk_acc)
+        dv_chunks.append(dv_acc)
+    dk = jnp.concatenate(dk_chunks, axis=1)
+    dv = jnp.concatenate(dv_chunks, axis=1)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention_vjp.defvjp(_fa_fwd, _fa_bwd)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid: jax.Array, *, scale: Optional[float] = None
+                     ) -> jax.Array:
+    """Single-token attention over a (possibly sequence-sharded) KV cache.
+
+    q: (B, 1, KVH, G, D); caches: (B, S, KVH, D); valid: (B, S) bool mask of
+    live cache slots.  Softmax over the S axis is written as plain reductions
+    so GSPMD turns them into the flash-decode partial-softmax collectives
+    when S is sharded (long_500k path).
+    """
+    B, _, KV, G, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(valid[:, None, None, None, :], s, _NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p / jnp.maximum(l, 1e-30), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,1,KV,G,D)

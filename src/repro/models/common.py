@@ -1,0 +1,114 @@
+"""Shared model building blocks: param specs, norms, RoPE, activations.
+
+Parameters are declared via ``Spec`` (shape + logical sharding axes + init);
+``init_from_specs`` materializes them and ``axes_from_specs`` yields the
+parallel pytree of logical axes consumed by ``launch/sharding.py``.  One
+source of truth — the two trees can never diverge.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Spec", "init_from_specs", "axes_from_specs", "rms_norm",
+           "layer_norm", "activation", "rope", "apply_rope", "cast_tree",
+           "count_params"]
+
+
+class Spec(NamedTuple):
+    shape: tuple
+    axes: tuple                 # logical axis names (None = replicated dim)
+    init: str = "normal"        # normal | zeros | ones | scaled | embed
+    scale: float = 1.0
+
+
+def _init_one(key, spec: Spec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    if spec.init == "embed":
+        std = 0.02 * spec.scale
+    x = jax.random.truncated_normal(key, -2.0, 2.0, spec.shape, jnp.float32)
+    return (x * std).astype(dtype)
+
+
+def init_from_specs(key, specs: Any, dtype) -> Any:
+    """specs: arbitrary pytree of Spec -> pytree of arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, Spec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_from_specs(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, Spec))
+
+
+def shapes_from_specs(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.shape, specs,
+                        is_leaf=lambda x: isinstance(x, Spec))
+
+
+# --------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32) \
+        + b.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def activation(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# --------------------------------------------------------------------- #
+def rope(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """(sin, cos) tables for given integer positions (…,)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., half)
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (B, S, *head_axes, D); sin/cos: (S, D/2).
+
+    Head axes (any number, e.g. (KV, G) for grouped queries) are broadcast.
+    """
+    half = x.shape[-1] // 2
+    n_heads_axes = x.ndim - 3
+    shape = (1, sin.shape[0]) + (1,) * n_heads_axes + (half,)
+    sin = sin.reshape(shape)
+    cos = cos.reshape(shape)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cast_tree(tree: Any, dtype) -> Any:
+    return jax.tree.map(lambda x: x.astype(dtype)
+                        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def count_params(tree: Any) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))

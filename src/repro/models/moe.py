@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN with grouped (per-data-shard) gather dispatch.
+
+GSPMD-friendly design: tokens are reshaped to (dp_shards, T_local, d) with
+the leading axis sharded on "data", so the argsort/cumsum/gather dispatch
+machinery is *local to each shard* (vectorized over the sharded axis — no
+global sort collectives).  The only cross-shard traffic is the expert einsum
+resharding ((shard, E, C, d): data-sharded buffer → expert-sharded weights),
+which GSPMD lowers to the expected all-to-all pattern.
+
+Capacity-dropping semantics: each expert takes at most C tokens per shard;
+overflow tokens pass through with zero expert contribution (residual keeps
+them alive).  An auxiliary load-balancing loss is returned.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_dispatch_indices", "moe_ffn"]
+
+
+class DispatchPlan(NamedTuple):
+    slot_token: jax.Array    # (Sh, E, C) int32 token index per expert slot
+    slot_valid: jax.Array    # (Sh, E, C) bool
+    slot_weight: jax.Array   # (Sh, E, C) combine weight (router prob)
+    aux_loss: jax.Array      # () load-balancing loss
+
+
+def moe_dispatch_indices(logits: jax.Array, top_k: int, capacity: int
+                         ) -> DispatchPlan:
+    """Build gather-based dispatch for router ``logits`` (Sh, T, E)."""
+    Sh, T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)            # (Sh, T, k)
+    # normalize combine weights over the selected experts
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(Sh, T * top_k)                  # (Sh, N)
+    flat_p = top_p.reshape(Sh, T * top_k)
+    flat_t = jnp.broadcast_to(jnp.arange(T)[:, None],
+                              (T, top_k)).reshape(T * top_k)
+    flat_t = jnp.broadcast_to(flat_t, (Sh, T * top_k))
+
+    # stable sort by expert id keeps token order (deterministic dropping)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)      # (Sh, N)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    sorted_t = jnp.take_along_axis(flat_t, order, axis=-1)
+    sorted_p = jnp.take_along_axis(flat_p, order, axis=-1)
+
+    # counts + offsets per expert (E is small: one-hot reduction)
+    onehot = sorted_e[..., None] == jnp.arange(E)          # (Sh, N, E)
+    counts = onehot.sum(axis=1)                            # (Sh, E)
+    offsets = jnp.cumsum(counts, axis=-1) - counts         # (Sh, E)
+
+    # slot (e, c) <- sorted position offsets[e] + c
+    pos = offsets[:, :, None] + jnp.arange(capacity)[None, None, :]
+    pos_clipped = jnp.clip(pos, 0, T * top_k - 1)
+    slot_token = jnp.take_along_axis(
+        sorted_t, pos_clipped.reshape(Sh, -1), axis=-1).reshape(Sh, E, capacity)
+    slot_weight = jnp.take_along_axis(
+        sorted_p, pos_clipped.reshape(Sh, -1), axis=-1).reshape(Sh, E, capacity)
+    slot_valid = (jnp.arange(capacity)[None, None, :] < counts[:, :, None])
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    frac = counts.astype(jnp.float32) / (T * top_k)        # (Sh, E)
+    mean_p = probs.mean(axis=1)                            # (Sh, E)
+    aux = E * jnp.mean(jnp.sum(frac * mean_p, axis=-1))
+    return DispatchPlan(slot_token.astype(jnp.int32), slot_valid,
+                        slot_weight, aux)
+
+
+def moe_ffn(x: jax.Array, p: dict, *, top_k: int, capacity_factor: float,
+            act, dp_shards: int, interpret_shard_axis=None) -> tuple:
+    """MoE feed-forward.
+
+    Args:
+      x: (B, S, d) activations.
+      p: params dict with 'router' (d, E), 'wg','wu' (E, d, f), 'wd' (E, f, d).
+    Returns: (out (B,S,d), aux_loss ()).
+    """
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    T = B * S
+    assert T % dp_shards == 0, (T, dp_shards)
+    T_local = T // dp_shards
+    xs = x.reshape(dp_shards, T_local, d)
+
+    logits = jnp.einsum("gtd,de->gte", xs, p["router"],
+                        preferred_element_type=jnp.float32)
+    capacity = max(int(T_local * top_k / E * capacity_factor), 8)
+    # keep MXU-friendly multiples where possible
+    capacity = ((capacity + 7) // 8) * 8
+    plan = moe_dispatch_indices(logits, top_k, capacity)
+
+    # gather tokens into (Sh, E, C, d) buffers.  vmap over the shard dim
+    # keeps gather/scatter *explicitly batched* so GSPMD partitions them
+    # along the sharded Sh axis instead of replicating (the unbatched
+    # scatter-add cost a full-activation all-reduce per layer — §Perf).
+    from repro.models.settings import constrain_moe_buffer
+
+    def _gather_one(x_l, tok):                 # (T,d), (E,C) -> (E,C,d)
+        return x_l[tok]
+
+    xin = jax.vmap(_gather_one)(xs, plan.slot_token)
+    xin = xin * plan.slot_valid[..., None].astype(xin.dtype)
+    xin = constrain_moe_buffer(xin)       # EP: token->expert all-to-all
+
+    h = act(jnp.einsum("gecd,edf->gecf", xin, p["wg"])) * \
+        jnp.einsum("gecd,edf->gecf", xin, p["wu"])
+    y = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    y = y * (plan.slot_weight * plan.slot_valid)[..., None].astype(y.dtype)
+    y = constrain_moe_buffer(y)           # a2a back before combine
+
+    def _scatter_one(y_l, tok):                # (E,C,d), (E,C) -> (T,d)
+        return jnp.zeros((T_local, d), y_l.dtype).at[
+            tok.reshape(-1)].add(y_l.reshape(-1, d))
+
+    out = jax.vmap(_scatter_one)(y, plan.slot_token)   # (Sh, T_local, d)
+    return out.reshape(B, S, d), plan.aux_loss

@@ -1,0 +1,78 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence (per channel, block-diagonal gate projections per head):
+    r_t = sigmoid(x_t · W_a + b_a)          recurrence gate
+    i_t = sigmoid(x_t · W_x + b_x)          input gate
+    log a_t = -c * softplus(Λ) * r_t        (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The train/prefill path uses ``jax.lax.associative_scan`` (the linear
+recurrence (a, b) ∘ (a', b') = (a·a', a'·b + b') is associative) — O(log S)
+depth, TPU-friendly; the Pallas kernel (kernels/rglru_scan) implements the
+blocked sequential variant and is validated against this reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rglru_scan", "rglru_step", "causal_conv1d", "conv1d_step"]
+
+_C = 8.0
+
+
+def _gates(x, p):
+    """x: (B, S, Hr, Dr) block-diagonal per rnn-head gate projections."""
+    r = jax.nn.sigmoid(jnp.einsum("bshd,hde->bshe", x, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bshd,hde->bshe", x, p["w_x"]) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,Hr,Dr)
+    return i, log_a
+
+
+def rglru_scan(x: jax.Array, p: dict, h0: jax.Array | None = None) -> tuple:
+    """Full-sequence RG-LRU.  x: (B, S, Hr, Dr) -> (y, h_last)."""
+    xf = x.astype(jnp.float32)
+    i, log_a = _gates(xf, p)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(x_t: jax.Array, h: jax.Array, p: dict) -> tuple:
+    """Single decode step. x_t: (B, Hr, Dr), h: (B, Hr, Dr) f32."""
+    xf = x_t.astype(jnp.float32)[:, None]                  # (B,1,Hr,Dr)
+    i, log_a = _gates(xf, p)
+    a = jnp.exp(log_a)[:, 0]
+    i = i[:, 0]
+    h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf[:, 0])
+    return h_new.astype(x_t.dtype), h_new
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width = w.shape[0].  x: (B, S, D)."""
+    W = w.shape[0]
+    out = x * w[-1] + b
+    for j in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j or None]
+        shifted = shifted[:, : x.shape[1]]
+        out = out + shifted * w[W - 1 - j]
+    return out
+
+
+def conv1d_step(x_t: jax.Array, state: jax.Array, w: jax.Array,
+                b: jax.Array) -> tuple:
+    """Decode-step conv. x_t: (B, D); state: (B, W-1, D) past inputs."""
+    W = w.shape[0]
+    window = jnp.concatenate([state, x_t[:, None]], axis=1)  # (B, W, D)
+    out = jnp.einsum("bwd,wd->bd", window, w) + b
+    new_state = window[:, 1:]
+    return out, new_state

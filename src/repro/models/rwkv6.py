@@ -1,0 +1,107 @@
+"""RWKV-6 "Finch" time-mix (WKV) with data-dependent decay.
+
+Recurrence per head (k-dim × v-dim matrix state S):
+    out_t = r_t · (S_{t-1} + (u ⊙ k_t) ⊗ v_t)
+    S_t   = diag(w_t) S_{t-1} + k_t ⊗ v_t
+with data-dependent per-channel decay  w_t = exp(-exp(w0 + lora(x_t))).
+
+Three implementations:
+  * ``wkv_sequential`` — step-by-step lax.scan; the correctness oracle.
+  * ``wkv_chunked``    — chunk-parallel (flash-linear-attention style):
+    intra-chunk scores in factored log-space with clamped exponents,
+    inter-chunk via the carried state.  This is the fast XLA path used by
+    dry-run/training (C× fewer sequential steps).
+  * Pallas kernel in ``kernels/rwkv6_wkv`` — blocked VMEM-resident state,
+    validated against ``wkv_sequential``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv_sequential", "wkv_chunked", "wkv_step"]
+
+_CLAMP = 30.0  # max |exponent| in the factored intra-chunk form
+
+
+def wkv_step(r_t, k_t, v_t, w_t, u, S):
+    """One decode step. r/k/w: (B,H,K); v: (B,H,V); u: (H,K); S: (B,H,K,V)."""
+    kv = k_t[..., :, None] * v_t[..., None, :]             # (B,H,K,V)
+    out = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+    S_new = w_t[..., :, None] * S + kv
+    return out, S_new
+
+
+def wkv_sequential(r, k, v, w, u, S0=None):
+    """Oracle. r/k/w: (B,H,S,K); v: (B,H,S,V); u: (H,K). Returns (out, S)."""
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    S = jnp.zeros((B, H, K, V), jnp.float32) if S0 is None else S0
+
+    def body(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        out, S = wkv_step(r_t, k_t, v_t, w_t, u, S)
+        return S, out
+
+    xs = (r.transpose(2, 0, 1, 3).astype(jnp.float32),
+          k.transpose(2, 0, 1, 3).astype(jnp.float32),
+          v.transpose(2, 0, 1, 3).astype(jnp.float32),
+          w.transpose(2, 0, 1, 3).astype(jnp.float32))
+    S_last, out = jax.lax.scan(body, S, xs)
+    return out.transpose(1, 2, 0, 3).astype(r.dtype), S_last
+
+
+def wkv_chunked(r, k, v, w, u, S0=None, *, chunk: int = 32):
+    """Chunk-parallel WKV.  Same signature as ``wkv_sequential``."""
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    C = min(chunk, T)
+    T_orig = T
+    if T % C:            # pad tail: w=1 (no decay), k=v=r=0 (no state change)
+        pad = C - T % C
+        padw = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        r = jnp.pad(r, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        w = jnp.pad(w, padw, constant_values=1.0)
+        T = T + pad
+    n = T // C
+    f32 = jnp.float32
+
+    rr = r.reshape(B, H, n, C, K).astype(f32)
+    kk = k.reshape(B, H, n, C, K).astype(f32)
+    vv = v.reshape(B, H, n, C, V).astype(f32)
+    lw = jnp.log(jnp.maximum(w.reshape(B, H, n, C, K).astype(f32), 1e-38))
+    la = jnp.cumsum(lw, axis=3)                    # la[t] = sum_{s<=t} lw_s
+    la_last = la[:, :, :, -1:, :]                  # (B,H,n,1,K)
+
+    q_t = rr * jnp.exp(la - lw)                    # r_t * exp(la[t-1]) <= |r|
+    k_in = kk * jnp.exp(jnp.minimum(-la, _CLAMP))  # k_s * exp(-la[s])
+    k_out = kk * jnp.exp(la_last - la)             # k_s * exp(la_C - la_s)<=|k|
+
+    # intra-chunk: scores[t,s] = q_t · k_in_s  for s < t  (+ u-bonus diag)
+    scores = jnp.einsum("bhntk,bhnsk->bhnts", q_t, k_in)
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    out = jnp.einsum("bhnts,bhnsv->bhntv", scores, vv)
+    diag = jnp.einsum("bhntk,bhntk->bhnt", rr, u[None, :, None, None, :] * kk)
+    out = out + diag[..., None] * vv
+
+    # inter-chunk via carried state
+    S = jnp.zeros((B, H, K, V), f32) if S0 is None else S0.astype(f32)
+
+    def body(S, inp):
+        q_c, kout_c, v_c, la_last_c, out_c = inp
+        inter = jnp.einsum("bhtk,bhkv->bhtv", q_c, S)
+        S_new = jnp.exp(la_last_c)[..., 0, :, None] * S + \
+            jnp.einsum("bhck,bhcv->bhkv", kout_c, v_c)
+        return S_new, out_c + inter
+
+    xs = (q_t.transpose(2, 0, 1, 3, 4), k_out.transpose(2, 0, 1, 3, 4),
+          vv.transpose(2, 0, 1, 3, 4), la_last.transpose(2, 0, 1, 3, 4),
+          out.transpose(2, 0, 1, 3, 4))
+    from repro.models.settings import unroll_enabled
+    S_last, out = jax.lax.scan(body, S, xs,
+                               unroll=n if unroll_enabled() else 1)
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, H, T, V)[:, :, :T_orig]
+    return out.astype(r.dtype), S_last

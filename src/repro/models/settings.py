@@ -1,0 +1,114 @@
+"""Context knobs the launch layer sets around model tracing.
+
+  * ``unroll_loops`` — cost-measurement mode: every internal lax.scan is
+    fully unrolled so XLA cost_analysis (which counts while bodies ONCE)
+    sees every FLOP.  Used by analysis.costmodel on small layer-count
+    variants; never for the real training program.
+  * ``activation_pspec`` — mesh axes for the activation batch dim; the
+    forward pass re-asserts x's sharding at each scan-unit boundary
+    (GSPMD propagation into while bodies is weak without it, which
+    replicates the remat residual stack — observed 93 GB/device before
+    the constraint).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_UNROLL = contextvars.ContextVar("repro_unroll_loops", default=False)
+_BATCH_AXES = contextvars.ContextVar("repro_batch_axes", default=None)
+_MOE_BUFFER = contextvars.ContextVar("repro_moe_buffer_spec", default=None)
+_HEAD_SPEC = contextvars.ContextVar("repro_head_spec", default=None)
+
+__all__ = ["unroll_loops", "unroll_enabled", "use_batch_axes",
+           "constrain_activations", "scan_maybe_unrolled",
+           "use_moe_buffer_spec", "constrain_moe_buffer",
+           "use_head_spec", "constrain_head"]
+
+
+@contextlib.contextmanager
+def unroll_loops():
+    tok = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+def unroll_enabled() -> bool:
+    return _UNROLL.get()
+
+
+@contextlib.contextmanager
+def use_batch_axes(axes: Optional[tuple]):
+    tok = _BATCH_AXES.set(axes)
+    try:
+        yield
+    finally:
+        _BATCH_AXES.reset(tok)
+
+
+def constrain_activations(x):
+    """Assert (batch, *rest) sharding on an activation tensor."""
+    axes = _BATCH_AXES.get()
+    if axes is None:
+        return x
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@contextlib.contextmanager
+def use_moe_buffer_spec(spec):
+    """spec: PartitionSpec for the (Sh, E, C, d) dispatch buffers.
+
+    EP mode ('expert'):  P(data_axes, "model", None, None) — forces the
+    token→expert all-to-all instead of replicating expert weights.
+    FFN mode ('ffn'):    P(batch_axes, None, None, None) — keeps buffers
+    batch-sharded; the (small) expert weights are all-gathered instead.
+    """
+    tok = _MOE_BUFFER.set(spec)
+    try:
+        yield
+    finally:
+        _MOE_BUFFER.reset(tok)
+
+
+def constrain_moe_buffer(x):
+    spec = _MOE_BUFFER.get()
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@contextlib.contextmanager
+def use_head_spec(spec):
+    """spec: PartitionSpec for the LM head at CE time, e.g. P(None,"model").
+
+    Hoists the FSDP all-gather of the head OUT of the per-chunk checkpointed
+    CE loop: one gather instead of one per chunk per pass (§Perf: the base
+    cost that dominated small-model train cells)."""
+    tok = _HEAD_SPEC.set(spec)
+    try:
+        yield
+    finally:
+        _HEAD_SPEC.reset(tok)
+
+
+def constrain_head(w):
+    spec = _HEAD_SPEC.get()
+    if spec is None:
+        return w
+    return jax.lax.with_sharding_constraint(w, spec)
+
+
+def scan_maybe_unrolled(body, init, xs, length=None):
+    """lax.scan that fully unrolls in cost-measurement mode."""
+    import jax.numpy as jnp
+    if length is None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    unroll = length if unroll_enabled() else 1
+    return jax.lax.scan(body, init, xs, length=length, unroll=unroll)

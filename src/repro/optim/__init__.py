@@ -1,0 +1,5 @@
+from .optimizers import (OptState, adamw, sgd_momentum, clip_by_global_norm,
+                         apply_updates)
+
+__all__ = ["OptState", "adamw", "sgd_momentum", "clip_by_global_norm",
+           "apply_updates"]

@@ -1,0 +1,114 @@
+"""Optimizers in pure JAX (no optax): AdamW + SGD-momentum.
+
+Production knobs used by the big configs:
+  * ``state_dtype`` — bf16 first/second moments (llama4-400b memory budget,
+    DESIGN.md §6).  Moments are stored in ``state_dtype`` but the update is
+    computed in f32.
+  * ZeRO-1 sharding is applied at the launch layer by sharding the moment
+    pytrees like the params and letting GSPMD partition the update.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "adamw", "sgd_momentum", "clip_by_global_norm",
+           "apply_updates"]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any            # None (as empty tuple) for sgd
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def adamw(lr: float | Callable = 1e-3, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          state_dtype: str = "float32") -> Optimizer:
+    sdt = jnp.dtype(state_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, sdt)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=jax.tree.map(zeros, params),
+                        v=jax.tree.map(zeros, params))
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return newp, m32.astype(sdt), v32.astype(sdt)
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        flat_p = jax.tree.leaves(params)
+        out = [upd(g, m, v, p) for g, m, v, p
+               in zip(flat_g, flat_m, flat_v, flat_p)]
+        newp = jax.tree.unflatten(tdef, [o[0] for o in out])
+        newm = jax.tree.unflatten(tdef, [o[1] for o in out])
+        newv = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return newp, OptState(step=step, m=newm, v=newv)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd_momentum(lr: float | Callable = 1e-2, *, momentum: float = 0.9,
+                 state_dtype: str = "float32") -> Optimizer:
+    sdt = jnp.dtype(state_dtype)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=jax.tree.map(lambda p: jnp.zeros(p.shape, sdt),
+                                       params),
+                        v=())
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+
+        def upd(g, m, p):
+            m32 = momentum * m.astype(jnp.float32) + g.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr_t * m32).astype(p.dtype)
+            return newp, m32.astype(sdt)
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        out = [upd(g, m, p) for g, m, p in zip(
+            flat_g, jax.tree.leaves(state.m), jax.tree.leaves(params))]
+        newp = jax.tree.unflatten(tdef, [o[0] for o in out])
+        newm = jax.tree.unflatten(tdef, [o[1] for o in out])
+        return newp, OptState(step=step, m=newm, v=())
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)

@@ -1,0 +1,82 @@
+"""HLO collective parser + roofline-term tests."""
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import collective_bytes, parse_collectives
+from repro.analysis.roofline import (HW_V5E, analytic_hbm_bytes, model_flops,
+                                     roofline_terms)
+from repro.configs.base import SHAPES, get_config
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[2,1376,8192]{2,1,0} all-gather(%p0), replica_groups={...}
+  %ar.1 = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %ar2 = (f32[128,256]{1,0}, f32[64]{0}) all-reduce(%a, %b), to_apply=%add
+  %rs = bf16[16,512]{1,0} reduce-scatter(%y), dimensions={0}
+  %cp = u8[1000]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %agstart = bf16[4,4]{1,0} all-gather-start(%w)
+  %agdone = bf16[4,4]{1,0} all-gather-done(%agstart)
+  %dot = f32[128,128]{1,0} dot(%l, %r)
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    out = parse_collectives(HLO_SAMPLE)
+    assert out["all-gather"]["count"] == 2          # ag + ag-start
+    ag_bytes = 2 * 1376 * 8192 * 2 + 4 * 4 * 2
+    assert out["all-gather"]["bytes"] == ag_bytes
+    assert out["all-reduce"]["count"] == 2
+    ar_bytes = 1024 * 4 + (128 * 256 * 4 + 64 * 4)
+    assert out["all-reduce"]["bytes"] == ar_bytes
+    assert out["all-reduce"]["weighted"] == 2.0 * ar_bytes  # 2x factor
+    assert out["reduce-scatter"]["bytes"] == 16 * 512 * 2
+    assert out["collective-permute"]["bytes"] == 1000
+    total = collective_bytes(HLO_SAMPLE)
+    assert total == pytest.approx(ag_bytes + 2 * ar_bytes + 16 * 512 * 2
+                                  + 1000)
+
+
+def test_parser_ignores_done_and_non_collectives():
+    out = parse_collectives(HLO_SAMPLE)
+    assert sum(v["count"] for v in out.values()) == 6  # dot/done excluded
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(1e15, 1e9, 1e9, n_devices=256,
+                       model_total_flops=2e17)
+    assert t.bottleneck == "compute"
+    assert t.compute_s == pytest.approx(1e15 / HW_V5E["peak_flops_bf16"])
+    t2 = roofline_terms(1e10, 1e9, 1e12, n_devices=256,
+                        model_total_flops=2e12)
+    assert t2.bottleneck == "collective"
+    assert 0 < t2.peak_fraction < 1
+
+
+def test_model_flops_moe_counts_active_only():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    # 6 * N_active(17B) * 1M tokens ≈ 1.1e17; total-params would be ~2.5e18
+    assert 0.8e17 < f_train < 1.4e17, f_train
+
+
+def test_model_flops_dense():
+    cfg = get_config("deepseek-67b")
+    f = model_flops(cfg, SHAPES["train_4k"])
+    assert 3.5e17 < f < 4.5e17, f  # 6*67e9*1.05e6
+
+
+def test_analytic_bytes_decode_dominated_by_cache():
+    cfg = get_config("deepseek-67b")
+    b = analytic_hbm_bytes(cfg, SHAPES["decode_32k"],
+                           {"data": 16, "model": 16})
+    # weights/dev ~1.05GB + cache/dev (≥6GB padded) => > 6e9
+    assert b > 6e9, b
+
+
+def test_analytic_bytes_train_compute_side():
+    cfg = get_config("stablelm-1.6b")
+    b = analytic_hbm_bytes(cfg, SHAPES["train_4k"], {"data": 16, "model": 16})
+    flops = model_flops(cfg, SHAPES["train_4k"]) / 256
+    # training at 1M tokens should be compute-bound on v5e
+    assert flops / HW_V5E["peak_flops_bf16"] > b / HW_V5E["hbm_bw"]

@@ -1,0 +1,224 @@
+"""Unit + property tests for the gradient-coding control plane."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coding import (CodingScheme, TwoStagePlanner,
+                               StragglerPredictor, allocate_supports,
+                               cyclic_repetition, decode_weights,
+                               fractional_repetition, satisfies_span,
+                               straggler_patterns, uncoded, vandermonde_code)
+
+
+def _recovery_exact(scheme: CodingScheme, alive: np.ndarray, rng) -> float:
+    """Max abs error of the decoded gradient vs the true sum of partials."""
+    K, D = scheme.K, 7
+    g = rng.standard_normal((K, D))
+    coded = scheme.B @ g                     # (M, D) per-worker coded grads
+    a = decode_weights(scheme, alive)
+    rec = a @ coded
+    return float(np.max(np.abs(rec - g.sum(axis=0))))
+
+
+# --------------------------------------------------------------------- #
+# span condition + exact recovery for every pattern, small sizes
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("M,s", [(4, 1), (5, 1), (5, 2), (6, 2), (7, 3)])
+def test_cyclic_span_and_recovery(M, s):
+    scheme = cyclic_repetition(M, s)
+    assert satisfies_span(scheme)
+    rng = np.random.default_rng(0)
+    for alive in straggler_patterns(M, s):
+        assert _recovery_exact(scheme, alive, rng) < 1e-8
+
+
+@pytest.mark.parametrize("M,s", [(4, 1), (6, 1), (6, 2), (9, 2)])
+def test_fractional_span_and_recovery(M, s):
+    scheme = fractional_repetition(M, s)
+    rng = np.random.default_rng(1)
+    for alive in straggler_patterns(M, s):
+        assert _recovery_exact(scheme, alive, rng) < 1e-8
+
+
+def test_uncoded_recovery_and_fragility():
+    scheme = uncoded(4, 10)
+    rng = np.random.default_rng(2)
+    assert _recovery_exact(scheme, np.ones(4, bool), rng) < 1e-8
+    with pytest.raises(ValueError):
+        decode_weights(scheme, np.array([True, True, True, False]))
+
+
+def test_frs_whole_group_dead_unrecoverable():
+    scheme = fractional_repetition(6, 1)  # groups of 2
+    alive = np.ones(6, bool)
+    alive[[0, 1]] = False  # kill group 0 entirely
+    with pytest.raises(ValueError):
+        decode_weights(scheme, alive)
+
+
+def test_redundancy_counts():
+    s = 2
+    scheme = cyclic_repetition(6, s)
+    assert np.allclose(scheme.copies_per_worker, s + 1)
+    assert scheme.redundancy == pytest.approx(s + 1)
+    frs = fractional_repetition(6, 1)
+    assert frs.redundancy == pytest.approx(2.0)
+    un = uncoded(3, 9)
+    assert un.redundancy == pytest.approx(1.0)
+
+
+# --------------------------------------------------------------------- #
+# hypothesis: vandermonde code recovers exactly for random capacity
+# profiles, random straggler patterns, and fewer-than-s stragglers
+# --------------------------------------------------------------------- #
+@settings(deadline=None, max_examples=60)
+@given(
+    M=st.integers(3, 10),
+    K=st.integers(1, 12),
+    s=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vandermonde_recovery_property(M, K, s, seed):
+    s = min(s, M - 1)
+    rng = np.random.default_rng(seed)
+    caps = rng.uniform(0.1, 3.0, size=M)
+    scheme = vandermonde_code(K, s, caps)
+    # random straggler count in [0, s]
+    n_dead = int(rng.integers(0, s + 1))
+    dead = rng.choice(M, size=n_dead, replace=False)
+    alive = np.ones(M, bool)
+    alive[dead] = False
+    assert _recovery_exact(scheme, alive, rng) < 1e-6
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    K=st.integers(1, 15),
+    s=st.integers(0, 4),
+    M=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_allocate_supports_invariants(K, s, M, seed):
+    if M < s + 1:
+        M = s + 1
+    rng = np.random.default_rng(seed)
+    caps = rng.uniform(0.0, 4.0, size=M)
+    support = allocate_supports(K, s, caps)
+    assert len(support) == K
+    for S_k in support:
+        assert len(S_k) == s + 1
+        assert len(set(S_k)) == s + 1          # distinct workers
+        assert all(0 <= m < M for m in S_k)
+    # load balance: no worker exceeds fair share by more than ~K
+    counts = np.bincount(np.concatenate(support).astype(int), minlength=M)
+    assert counts.sum() == (s + 1) * K
+
+
+# --------------------------------------------------------------------- #
+# two-stage planner
+# --------------------------------------------------------------------- #
+def _full_epoch_recovery(M, K, M1, finished_mask, s, seed=0):
+    """Simulate one TSDCFL epoch end-to-end and check exact recovery."""
+    rng = np.random.default_rng(seed)
+    g = rng.standard_normal((K, 5))
+    planner = TwoStagePlanner(M, K, M1)
+    st1 = planner.plan_stage1(epoch=0)
+    speeds = rng.uniform(0.5, 2.0, size=M)
+    st2 = planner.plan_stage2(st1, finished_mask, s=s, speeds=speeds)
+
+    # stage-1 contribution: finished workers deliver their uncoded sums
+    contrib = np.zeros(5)
+    B1 = st1.scheme.B
+    for row, w in enumerate(st1.workers):
+        if finished_mask[row]:
+            contrib += B1[row] @ g
+    if not st2.triggered:
+        return float(np.max(np.abs(contrib - g.sum(axis=0))))
+
+    # stage-2: active workers compute coded grads over uncovered partitions
+    scheme = st2.scheme
+    g_rem = g[st2.uncovered_partitions]
+    coded = scheme.B @ g_rem
+    # kill s random active workers
+    n_active = scheme.M
+    dead = rng.choice(n_active, size=min(s, n_active - 1), replace=False)
+    alive = np.ones(n_active, bool)
+    alive[dead] = False
+    a = decode_weights(scheme, alive)
+    contrib += a @ coded
+    return float(np.max(np.abs(contrib - g.sum(axis=0))))
+
+
+@pytest.mark.parametrize("M,K,M1,s", [(6, 12, 4, 1), (6, 12, 4, 2),
+                                      (8, 16, 5, 2), (5, 10, 3, 1)])
+def test_two_stage_epoch_recovery(M, K, M1, s):
+    rng = np.random.default_rng(3)
+    for trial in range(5):
+        finished = rng.random(M1) < 0.6
+        err = _full_epoch_recovery(M, K, M1, finished, s, seed=trial)
+        assert err < 1e-6, f"trial {trial}: recovery error {err}"
+
+
+def test_two_stage_no_code_when_all_finish():
+    M, K, M1 = 6, 12, 6
+    planner = TwoStagePlanner(M, K, M1)
+    st1 = planner.plan_stage1(epoch=0)
+    st2 = planner.plan_stage2(st1, np.ones(M1, bool), s=2,
+                              speeds=np.ones(M))
+    assert not st2.triggered                      # K_c == K fast path
+    assert len(st2.uncovered_partitions) == 0
+
+
+def test_two_stage_eq16_load_proportional_to_speed():
+    """Fresh-worker loads track W_m (Eq. 16)."""
+    M, K, M1 = 8, 32, 4
+    planner = TwoStagePlanner(M, K, M1)
+    st1 = planner.plan_stage1(epoch=0)
+    finished = np.zeros(M1, bool)  # nobody finished -> all K uncovered
+    speeds = np.ones(M)
+    fresh = np.setdiff1d(np.arange(M), st1.workers)
+    speeds[fresh] = [4.0, 2.0, 1.0, 1.0]
+    st2 = planner.plan_stage2(st1, finished, s=1, speeds=speeds)
+    counts = st2.scheme.support.sum(axis=1).astype(float)
+    # rows: first M1-Mc continuing, then fresh
+    fresh_counts = counts[len(st1.workers) - 0:]  # continuing = 4 rows
+    fresh_counts = counts[4:]
+    # worker with speed 4 should get more than worker with speed 1
+    assert fresh_counts[0] > fresh_counts[2]
+
+
+def test_stage1_rotation_covers_all_workers():
+    planner = TwoStagePlanner(M=7, K=14, M1=3)
+    seen = set()
+    for e in range(7):
+        seen.update(planner.plan_stage1(e).workers.tolist())
+    assert seen == set(range(7))
+
+
+# --------------------------------------------------------------------- #
+# predictor
+# --------------------------------------------------------------------- #
+def test_predictor_speeds_and_s():
+    p = StragglerPredictor(M=4)
+    for _ in range(20):
+        p.update_times(np.arange(4), np.array([1.0, 2.0, 4.0, 1.0]))
+    W = p.speeds()
+    assert W[0] > W[1] > W[2]
+    for _ in range(10):
+        p.update_straggler_count(2)
+    assert p.predict_s(n_active=6) == 2
+    # margin pushes up after variance appears
+    p2 = StragglerPredictor(M=4, margin=1.0)
+    for v in [1, 3, 1, 3, 1, 3]:
+        p2.update_straggler_count(v)
+    assert p2.predict_s(n_active=8) >= 2
+
+
+def test_predictor_straggler_probs_monotone():
+    p = StragglerPredictor(M=3)
+    for _ in range(30):
+        p.update_times(np.arange(3), np.array([1.0, 2.0, 3.0]) *
+                       (1 + 0.1 * np.random.default_rng(0).standard_normal(3)))
+    probs = p.straggler_probs(deadline_per_task=2.0)
+    assert probs[0] < probs[2]
+    assert np.all(probs >= 0) and np.all(probs <= 1)

@@ -1,0 +1,31 @@
+"""End-to-end driver tests: train (plain + coded + resume) at tiny scale."""
+import numpy as np
+import pytest
+
+from repro.launch.train import main as train_main
+
+
+def test_train_driver_plain(tmp_path, capsys):
+    train_main(["--arch", "tiny", "--steps", "6", "--log-every", "2",
+                "--ckpt-dir", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert "done in" in out
+    assert "loss=" in out
+
+
+def test_train_driver_coded(capsys):
+    train_main(["--arch", "tiny", "--steps", "4", "--coded",
+                "--log-every", "2", "--workers", "4"])
+    out = capsys.readouterr().out
+    assert "done in" in out
+    assert "util=" in out
+
+
+def test_train_driver_resume(tmp_path, capsys):
+    train_main(["--arch", "tiny", "--steps", "4", "--ckpt-dir",
+                str(tmp_path), "--ckpt-every", "2", "--log-every", "2"])
+    capsys.readouterr()
+    train_main(["--arch", "tiny", "--steps", "6", "--ckpt-dir",
+                str(tmp_path), "--log-every", "2"])
+    out = capsys.readouterr().out
+    assert "resumed from step" in out

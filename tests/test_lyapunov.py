@@ -1,0 +1,169 @@
+"""Property + behaviour tests for the Lyapunov scheduler (paper claims C4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lyapunov import (Observation, SystemParams, init_queues,
+                                 jain_index, run_horizon, schedule_slot)
+from repro.core.lyapunov.scheduler import _p4_auxiliary
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _params(M, V=50.0, T=1.0):
+    return SystemParams(
+        T=T,
+        p=jnp.full((M,), 0.5),
+        delta=jnp.full((M,), 1e-3),
+        xi=jnp.full((M,), 0.1),
+        f_max=jnp.full((M,), 100.0),
+        F=200.0,
+        E_cap=jnp.full((M,), 50.0),
+        V=V,
+        lam=jnp.ones((M,)),
+    )
+
+
+def _obs_seq(M, T_slots, seed=0, d_scale=5.0, r_scale=8.0):
+    rng = np.random.default_rng(seed)
+    return Observation(
+        D=jnp.asarray(rng.uniform(0, d_scale, (T_slots, M)), jnp.float32),
+        r=jnp.asarray(rng.uniform(1.0, r_scale, (T_slots, M)), jnp.float32),
+        E_H=jnp.asarray(rng.uniform(0, 3.0, (T_slots, M)), jnp.float32),
+        L=jnp.asarray(rng.integers(1, M, (T_slots,)), jnp.float32),
+        new_cycles=jnp.asarray(rng.uniform(0, 20.0, (T_slots, M)), jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------- #
+# P4 closed form is the true argmax (property test)
+# --------------------------------------------------------------------- #
+@settings(deadline=None, max_examples=50)
+@given(H=st.floats(0.0, 100.0), D=st.floats(0.01, 50.0),
+       V=st.floats(0.1, 200.0))
+def test_p4_closed_form_is_argmax(H, D, V):
+    y_star = float(_p4_auxiliary(jnp.asarray([H]), jnp.asarray([D]), V)[0])
+    grid = np.linspace(0.0, D, 2001)
+    obj = V * np.log2(1 + grid) - H * grid
+    y_grid = grid[int(np.argmax(obj))]
+    obj_star = V * np.log2(1 + y_star) - H * y_star
+    assert obj_star >= obj.max() - 1e-3 * max(1.0, abs(obj.max()))
+    assert 0.0 <= y_star <= D * (1 + 1e-5) + 1e-4  # f32 clip rounding
+    del y_grid
+
+
+# --------------------------------------------------------------------- #
+# constraint satisfaction every slot (paper C1–C5)
+# --------------------------------------------------------------------- #
+def test_constraints_hold_over_horizon():
+    M, T_slots = 8, 400
+    params = _params(M)
+    obs = _obs_seq(M, T_slots)
+    state = init_queues(M, E0=25.0)
+    final, dec = run_horizon(state, params, obs)
+    nu, d, c = np.asarray(dec.nu), np.asarray(dec.d), np.asarray(dec.c)
+    # C1: 0 <= nu <= T
+    assert nu.min() >= -1e-6 and nu.max() <= params.T + 1e-6
+    # sub-channel budget: sum_m nu <= T * L
+    assert np.all(nu.sum(axis=1) <= params.T * np.asarray(obs.L) + 1e-4)
+    # C2: 0 <= d <= D
+    assert d.min() >= -1e-6
+    assert np.all(d <= np.asarray(obs.D) + 1e-6)
+    # C3: 0 <= e_store <= E_H
+    es = np.asarray(dec.e_store)
+    assert es.min() >= -1e-6
+    assert np.all(es <= np.asarray(obs.E_H) + 1e-6)
+    # c never exceeds what the channel could carry
+    assert np.all(c <= np.asarray(obs.r) * nu + 1e-4)
+
+
+# --------------------------------------------------------------------- #
+# mean-rate stability: time-averaged queues bounded (C4)
+# --------------------------------------------------------------------- #
+def test_queue_stability():
+    M, T_slots = 6, 2000
+    params = _params(M, V=20.0)
+    obs = _obs_seq(M, T_slots, seed=1)
+    state = init_queues(M, E0=25.0)
+
+    def body(s, o):
+        s2, _ = schedule_slot(s, params, o)
+        return s2, jnp.concatenate([s2.Q, s2.H])
+
+    final, traj = jax.lax.scan(body, state, obs)
+    traj = np.asarray(traj)
+    # the last 25% should not be growing: compare window means
+    a = traj[T_slots // 2: 3 * T_slots // 4].mean()
+    b = traj[3 * T_slots // 4:].mean()
+    assert b < 2.0 * a + 10.0, f"queues appear unstable: {a} -> {b}"
+    assert np.isfinite(traj).all()
+
+
+# --------------------------------------------------------------------- #
+# V knob: larger V -> more admitted throughput, larger backlog (O(V)/O(1/V))
+# --------------------------------------------------------------------- #
+def test_v_tradeoff():
+    M, T_slots = 6, 1500
+    obs = _obs_seq(M, T_slots, seed=2)
+    results = {}
+    for V in [1.0, 200.0]:
+        params = _params(M, V=V)
+        state = init_queues(M, E0=25.0)
+        final, dec = run_horizon(state, params, obs)
+        results[V] = (float(np.asarray(dec.y).mean()),
+                      float(np.asarray(final.H).mean()))
+    y_low, H_low = results[1.0]
+    y_high, H_high = results[200.0]
+    assert y_high > y_low            # more aggressive admission target
+    assert H_high >= H_low - 1e-3    # at the price of backlog
+
+
+# --------------------------------------------------------------------- #
+# fairness: log-utility scheduler beats max-rate greedy on Jain index
+# --------------------------------------------------------------------- #
+def test_fairness_vs_greedy():
+    M, T_slots = 8, 1200
+    rng = np.random.default_rng(3)
+    # heterogeneous channels: worker 0 has a 10x better channel
+    r = np.ones((T_slots, M)) * 2.0
+    r[:, 0] = 20.0
+    obs = Observation(
+        D=jnp.asarray(rng.uniform(2, 4, (T_slots, M)), jnp.float32),
+        r=jnp.asarray(r, jnp.float32),
+        E_H=jnp.asarray(rng.uniform(1, 3, (T_slots, M)), jnp.float32),
+        L=jnp.full((T_slots,), 2.0),
+        new_cycles=jnp.zeros((T_slots, M)),
+    )
+    params = _params(M, V=50.0)
+    state = init_queues(M, E0=25.0)
+    _, dec = run_horizon(state, params, obs)
+    thru = np.asarray(dec.c).sum(axis=0)
+
+    # greedy: all channel time to the best channel each slot
+    greedy = np.zeros(M)
+    Q = np.zeros(M)
+    for t in range(T_slots):
+        D_t = np.asarray(obs.D[t])
+        r_t = np.asarray(obs.r[t])
+        Q += D_t
+        best = int(np.argmax(r_t * np.minimum(Q / np.maximum(r_t, 1e-9), 1.0)))
+        send = min(Q[best], r_t[best] * params.T * float(obs.L[t]))
+        greedy[best] += send
+        Q[best] -= send
+    jain_sched = float(jain_index(jnp.asarray(thru)))
+    jain_greedy = float(jain_index(jnp.asarray(greedy)))
+    assert jain_sched > jain_greedy, (jain_sched, jain_greedy)
+
+
+def test_schedule_slot_jits():
+    M = 4
+    params = _params(M)
+    obs = Observation(D=jnp.ones(M), r=jnp.ones(M) * 4, E_H=jnp.ones(M),
+                      L=jnp.asarray(2.0), new_cycles=jnp.ones(M))
+    state = init_queues(M, E0=10.0)
+    fn = jax.jit(lambda s, o: schedule_slot(s, params, o))
+    s2, dec = fn(state, obs)
+    assert np.isfinite(np.asarray(s2.Q)).all()
+    assert np.isfinite(np.asarray(dec.nu)).all()

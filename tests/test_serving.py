@@ -1,0 +1,41 @@
+"""Serving-layer integration: prefill+decode loop with Lyapunov admission."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+TINY = ModelConfig(name="tiny-serve", family="dense", n_layers=2,
+                   d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                   d_ff=128, vocab=128, compute_dtype="float32")
+
+
+def test_greedy_generation_is_deterministic_and_consistent():
+    params = tfm.init_params(TINY, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 128, (2, 16)),
+                       jnp.int32)
+    last, caches, pos = tfm.prefill(params, {"tokens": toks}, TINY)
+    caches = tfm.pad_cache(caches, TINY, extra=8)
+    outs = []
+    tok = jnp.argmax(last, -1)[:, None]
+    for i in range(8):
+        logits, caches = tfm.decode_step(params, tok, caches, pos + i, TINY)
+        tok = jnp.argmax(logits, -1)[:, None]
+        outs.append(np.asarray(tok))
+    gen = np.concatenate(outs, axis=1)
+
+    # teacher-forced check: feeding the generated tokens through a fresh
+    # forward reproduces the same greedy choices
+    full = jnp.concatenate(
+        [toks, jnp.argmax(last, -1)[:, None], jnp.asarray(gen)], axis=1)
+    x, _, _ = tfm.forward(params, {"tokens": full[:, :-1]}, TINY)
+    head = params["lm_head"]
+    ref = np.argmax(np.asarray(x @ head), axis=-1)
+    np.testing.assert_array_equal(gen, ref[:, 16:])
+
+
+def test_serve_driver_runs():
+    from repro.launch.serve import main
+    main(["--arch", "tiny", "--slots", "6", "--clients", "3",
+          "--prompt-len", "8", "--gen-len", "2", "--batch", "2"])
