@@ -13,8 +13,8 @@ def report(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
-SUITES = ["paper_fel", "paper_lyapunov", "paper_ablations", "kernel_bench",
-          "roofline_table"]
+SUITES = ["paper_fel", "paper_lyapunov", "paper_e2e", "paper_ablations",
+          "kernel_bench", "roofline_table"]
 
 
 def main() -> None:

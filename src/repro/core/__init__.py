@@ -3,14 +3,15 @@ from repro.core import coding, lyapunov
 from repro.core.coded_step import (SlotPlan, build_slot_plan,
                                    make_coded_train_step, make_train_step,
                                    slot_weights)
-from repro.core.runtime import (CompletionTimeModel, EpochResult,
-                                TwoStageRuntime,
-                                simulate_epoch_single_stage)
+from repro.core.runtime import (CompletionTimeModel, ComputePhase,
+                                EpochResult, TwoStageRuntime,
+                                simulate_epoch_single_stage,
+                                twostage_slot_bound)
 
 __all__ = [
     "coding", "lyapunov",
     "SlotPlan", "build_slot_plan", "make_coded_train_step",
     "make_train_step", "slot_weights",
-    "CompletionTimeModel", "EpochResult", "TwoStageRuntime",
-    "simulate_epoch_single_stage",
+    "CompletionTimeModel", "ComputePhase", "EpochResult", "TwoStageRuntime",
+    "simulate_epoch_single_stage", "twostage_slot_bound",
 ]

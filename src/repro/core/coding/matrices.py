@@ -29,6 +29,7 @@ import numpy as np
 
 __all__ = [
     "CodingScheme",
+    "build_static_scheme",
     "cyclic_repetition",
     "fractional_repetition",
     "uncoded",
@@ -89,6 +90,20 @@ class CodingScheme:
     def redundancy(self) -> float:
         """Total partition copies / K  (1.0 = no redundancy)."""
         return float(self.support.sum()) / max(self.K, 1)
+
+
+def build_static_scheme(name: str, M: int, K: int, s: int) -> "CodingScheme":
+    """The paper's single-stage baselines by name (shared by the trainer
+    and the co-simulator so their preconditions cannot drift)."""
+    if name == "cyclic":
+        if K != M:
+            raise ValueError("CRS baselines use K == M partitions")
+        return cyclic_repetition(M, s)
+    if name == "fractional":
+        return fractional_repetition(M, s)
+    if name == "uncoded":
+        return uncoded(M, K)
+    raise ValueError(f"unknown static scheme {name!r}")
 
 
 def default_nodes(n: int) -> np.ndarray:

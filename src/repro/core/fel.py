@@ -9,6 +9,17 @@ Supports the paper's three schemes under identical sampled worker behaviour:
 All schemes recover the *exact* full gradient when enough workers return, so
 epoch-based convergence is identical (paper Fig 5a/6a); wall-clock differs
 (Fig 5e/6e) — both are what the benchmarks measure.
+
+Two epoch-simulation backends (DESIGN.md §3.4):
+
+  * the legacy instant-uplink path (default) — compute time only, the
+    uplink is free, decode fires when enough workers have *computed*;
+  * ``cluster=`` an ``repro.sim.cluster.EdgeCluster`` — the closed-loop
+    co-simulator: coded partial gradients drain through the Lyapunov
+    P4–P7 scheduler and decode fires only once enough contributions have
+    *arrived*, so every ``EpochLog`` carries a compute/comm wall-clock
+    breakdown.  All four schemes run under identical sampled compute and
+    channel behaviour via ``repro.sim.scenarios.make_cluster``.
 """
 from __future__ import annotations
 
@@ -21,9 +32,8 @@ import numpy as np
 
 from repro.core.coded_step import (build_slot_plan, make_coded_train_step,
                                    slot_weights)
-from repro.core.coding import (CodingScheme, cyclic_repetition,
-                               fractional_repetition, uncoded)
-from repro.core.runtime import (CompletionTimeModel, TwoStageRuntime,
+from repro.core.coding import CodingScheme
+from repro.core.runtime import (build_epoch_backend,
                                 simulate_epoch_single_stage)
 
 __all__ = ["FELTrainer"]
@@ -38,57 +48,73 @@ class EpochLog:
     n_stragglers: int
     redundancy: float
     efficiency: float = 0.0
+    compute_time: float = 0.0
+    comm_time: float = 0.0
+    decode_ok: bool = True
 
 
 class FELTrainer:
     """One object per (scheme × cluster) experiment."""
 
     def __init__(self, scheme: str, M: int, K: int, dataset, per_slot_loss,
-                 optimizer, params, *, M1: Optional[int] = None, s: int = 1,
-                 rates: Optional[np.ndarray] = None, noise_scale: float = 0.2,
-                 fault_prob: float = 0.0, straggler_prob: float = 0.0,
-                 straggler_slow: float = 8.0, seed: int = 0,
-                 n_slots: Optional[int] = None):
+                 optimizer, params, *, M1: Optional[int] = None,
+                 s: Optional[int] = None,
+                 rates: Optional[np.ndarray] = None,
+                 noise_scale: Optional[float] = None,
+                 fault_prob: Optional[float] = None,
+                 straggler_prob: Optional[float] = None,
+                 straggler_slow: Optional[float] = None, seed: int = 0,
+                 n_slots: Optional[int] = None, cluster=None):
         self.scheme_name = scheme
-        self.M, self.K, self.s = M, K, s
         self.dataset = dataset
         self.params = params
         self.opt_state = optimizer.init(params)
         self.step_fn = jax.jit(make_coded_train_step(per_slot_loss, optimizer))
-        self.rates = np.asarray(rates if rates is not None else np.ones(M),
-                                np.float64)
         self._rng = np.random.default_rng(seed + 99)
         self.logs: list = []
+        self.cluster = cluster
 
-        if scheme == "two-stage":
-            self.runtime = TwoStageRuntime(
-                M, K, M1 or max(M // 2, 1), rates=self.rates,
-                noise_scale=noise_scale, fault_prob=fault_prob,
-                straggler_prob=straggler_prob, straggler_slow=straggler_slow,
+        if cluster is not None:
+            # co-simulated path: the EdgeCluster owns compute + channel
+            # sampling and produces the plan/weights per epoch — reject
+            # simulation-physics kwargs instead of silently dropping them.
+            conflicting = {k: v for k, v in dict(
+                M1=M1, s=s, rates=rates, noise_scale=noise_scale,
+                fault_prob=fault_prob, straggler_prob=straggler_prob,
+                straggler_slow=straggler_slow, n_slots=n_slots).items()
+                if v is not None}
+            if conflicting:
+                raise ValueError(
+                    "cluster= owns the simulation physics; configure the "
+                    "EdgeCluster/scenario instead of passing "
+                    f"{sorted(conflicting)}")
+            if (cluster.M, cluster.K) != (M, K):
+                raise ValueError(
+                    f"cluster is (M={cluster.M}, K={cluster.K}), trainer "
+                    f"wants (M={M}, K={K})")
+            if cluster.scheme != scheme:
+                raise ValueError(f"cluster simulates {cluster.scheme!r}, "
+                                 f"trainer is {scheme!r}")
+            self.M, self.K, self.s = M, K, cluster.s
+            self.runtime = cluster.runtime
+            self.static_scheme = cluster.static_scheme
+            self.rates = np.asarray(cluster.rates, np.float64)
+            self.n_slots = cluster.n_slots
+            return
+
+        s = 1 if s is None else s
+        self.M, self.K, self.s = M, K, s
+        self.rates = np.asarray(rates if rates is not None else np.ones(M),
+                                np.float64)
+        self.runtime, self.static_scheme, self.time_model, self.n_slots = \
+            build_epoch_backend(
+                scheme, M, K, M1=M1, s=s, rates=self.rates,
+                noise_scale=0.2 if noise_scale is None else noise_scale,
+                fault_prob=fault_prob or 0.0,
+                straggler_prob=straggler_prob or 0.0,
+                straggler_slow=(8.0 if straggler_slow is None
+                                else straggler_slow),
                 seed=seed, n_slots=n_slots)
-            self.static_scheme = None
-            self.n_slots = n_slots or self._twostage_slot_bound()
-        else:
-            if scheme == "cyclic":
-                assert K == M, "CRS baselines use K == M partitions"
-                self.static_scheme = cyclic_repetition(M, s)
-            elif scheme == "fractional":
-                self.static_scheme = fractional_repetition(M, s)
-            elif scheme == "uncoded":
-                self.static_scheme = uncoded(M, K)
-            else:
-                raise ValueError(scheme)
-            self.time_model = CompletionTimeModel(
-                self.rates, noise_scale, fault_prob, straggler_prob,
-                straggler_slow)
-            self.n_slots = n_slots or int(
-                self.static_scheme.copies_per_worker.max())
-
-    def _twostage_slot_bound(self) -> int:
-        # stage-1 share + worst-case stage-2 coded share
-        per1 = -(-self.K // max(self.runtime.M1, 1))
-        per2 = -(-(self.K * (self.s + 2)) // max(self.M - 1, 1)) + 1
-        return per1 + per2 + 2
 
     # ------------------------------------------------------------------ #
     def _slot_batch(self, epoch: int, plan) -> dict:
@@ -114,12 +140,17 @@ class FELTrainer:
         return {key: jnp.asarray(np.stack(v)) for key, v in out.items()}
 
     def run_epoch(self, epoch: int) -> EpochLog:
-        if self.scheme_name == "two-stage":
-            res = self.runtime.run_epoch(epoch)
+        compute_t = comm_t = 0.0
+        decode_ok = True
+        if self.cluster is not None or self.scheme_name == "two-stage":
+            src = self.cluster if self.cluster is not None else self.runtime
+            res = src.run_epoch(epoch)
             plan, w = res.plan, res.weights
             time, util = res.time, res.utilization
             n_str, red = res.n_stragglers, res.redundancy
             eff = res.compute_efficiency
+            compute_t, comm_t = res.compute_time, res.comm_time
+            decode_ok = res.decode_ok
         else:
             sim = simulate_epoch_single_stage(self.static_scheme,
                                               self.time_model, self._rng)
@@ -132,12 +163,17 @@ class FELTrainer:
             n_str = int(self.M - sim["alive"].sum())
             red = sim["redundancy"]
             eff = min(self.K / max(sim["executed_tasks"], 1e-12), 1.0)
+            compute_t, decode_ok = time, sim["ok"]
         batch = self._slot_batch(epoch, plan)
         self.params, self.opt_state, aux = self.step_fn(
             self.params, self.opt_state, batch, jnp.asarray(w, jnp.float32))
-        log = EpochLog(epoch=epoch, loss=float(aux["loss"]), time=time,
+        # failed decode ⟹ all-zero weights ⟹ aux['loss'] is a meaningless
+        # 0.0 — log NaN so convergence curves show a gap, not a dip
+        loss = float(aux["loss"]) if decode_ok else float("nan")
+        log = EpochLog(epoch=epoch, loss=loss, time=time,
                        utilization=util, n_stragglers=n_str, redundancy=red,
-                       efficiency=eff)
+                       efficiency=eff, compute_time=compute_t,
+                       comm_time=comm_t, decode_ok=decode_ok)
         self.logs.append(log)
         return log
 

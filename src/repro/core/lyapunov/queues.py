@@ -47,6 +47,16 @@ class SystemParams:
     lam: jnp.ndarray         # (M,) fairness weights λ_m
 
 
+# Pytree registration lets SystemParams cross a jit boundary as a traced
+# argument, so one compiled schedule_slot serves every co-simulated cluster
+# of the same worker count instead of recompiling per parameter set.
+jax.tree_util.register_pytree_node(
+    SystemParams,
+    lambda sp: ((sp.T, sp.p, sp.delta, sp.xi, sp.f_max, sp.F, sp.E_cap,
+                 sp.V, sp.lam), None),
+    lambda _, leaves: SystemParams(*leaves))
+
+
 def init_queues(M: int, *, E0: float = 0.0) -> QueueState:
     z = jnp.zeros((M,))
     return QueueState(Q=z, H=z, E=jnp.full((M,), E0), R=z,

@@ -7,6 +7,18 @@ from a ``CompletionTimeModel`` (shifted-exponential per-worker service times
 latency analysis).  Everything downstream (slot plans, decode weights,
 utilization metrics) is identical either way.
 
+The epoch is split into two explicit halves (DESIGN.md §3):
+
+  * :meth:`TwoStageRuntime.compute_phase` — stage-1 plan → deadline →
+    stage-2 plan, sampling completion times (through the event engine's RNG
+    when one is attached) and recording per-worker *gradient-ready* times.
+  * decode — either the legacy instant-uplink path
+    (:meth:`TwoStageRuntime.run_epoch`: decode fires as soon as enough
+    workers have *computed*) or the co-simulated path
+    (:meth:`TwoStageRuntime.result_from_phase`, driven by
+    ``repro.sim.cluster.EdgeCluster``: decode fires only once enough coded
+    contributions have *arrived* through the Lyapunov-scheduled uplink).
+
 Also provides ``simulate_epoch_single_stage`` for the paper's baselines
 (CRS / FRS / uncoded) so the benchmarks compare all schemes under the same
 sampled worker behaviour.
@@ -22,8 +34,10 @@ from repro.core.coding import (CodingScheme, StragglerPredictor,
                                TwoStagePlanner, decode_weights)
 from repro.core.coded_step import SlotPlan, build_slot_plan, slot_weights
 
-__all__ = ["CompletionTimeModel", "EpochResult", "TwoStageRuntime",
-           "simulate_epoch_single_stage"]
+__all__ = ["CompletionTimeModel", "ComputePhase", "EpochResult",
+           "TwoStageRuntime", "build_epoch_backend",
+           "simulate_epoch_single_stage", "single_stage_accounting",
+           "twostage_slot_bound"]
 
 
 @dataclasses.dataclass
@@ -56,6 +70,45 @@ class CompletionTimeModel:
         return t
 
 
+def twostage_slot_bound(M: int, K: int, M1: int, s: int) -> int:
+    """Static slot-count bound: stage-1 share + worst-case stage-2 share."""
+    per1 = -(-K // max(M1, 1))
+    per2 = -(-(K * (s + 2)) // max(M - 1, 1)) + 1
+    return per1 + per2 + 2
+
+
+def build_epoch_backend(scheme: str, M: int, K: int, *, M1, s, rates,
+                        noise_scale, fault_prob, straggler_prob,
+                        straggler_slow, seed, n_slots,
+                        deadline_quantile: float = 0.9,
+                        select: str = "rotate", engine=None):
+    """Per-scheme epoch-simulation backend, shared by ``FELTrainer`` and
+    ``EdgeCluster`` so their setups cannot drift.
+
+    Returns ``(runtime, static_scheme, time_model, n_slots)`` — exactly one
+    of ``runtime``/``static_scheme`` is non-None.  For two-stage the
+    runtime's slot width is pinned to the static bound (one train-step
+    compile; oversized epochs auto-size, see ``_assemble``).
+    """
+    from repro.core.coding import build_static_scheme
+    rates = np.asarray(rates, np.float64)
+    if scheme == "two-stage":
+        runtime = TwoStageRuntime(
+            M, K, M1 or max(M // 2, 1), rates=rates,
+            noise_scale=noise_scale, fault_prob=fault_prob,
+            straggler_prob=straggler_prob, straggler_slow=straggler_slow,
+            deadline_quantile=deadline_quantile, seed=seed, select=select,
+            engine=engine)
+        n_slots = n_slots or twostage_slot_bound(M, K, runtime.M1, s)
+        runtime.n_slots = n_slots
+        return runtime, None, runtime.time_model, n_slots
+    static = build_static_scheme(scheme, M, K, s)
+    time_model = CompletionTimeModel(rates, noise_scale, fault_prob,
+                                     straggler_prob, straggler_slow)
+    return None, static, time_model, (
+        n_slots or int(static.copies_per_worker.max()))
+
+
 @dataclasses.dataclass
 class EpochResult:
     plan: SlotPlan
@@ -71,6 +124,16 @@ class EpochResult:
 
     M: int = 0
 
+    # compute/comm wall-clock breakdown. ``compute_time`` is the epoch time
+    # under a free/instant uplink (the pre-co-sim semantics); ``comm_time``
+    # is the extra wall-clock until the decodable set *arrived* at the
+    # server.  time == compute_time + comm_time.  Legacy (instant-uplink)
+    # paths report comm_time == 0.
+    compute_time: float = 0.0
+    comm_time: float = 0.0
+    decode_ok: bool = True
+    comm: Optional[object] = None     # repro.sim.cluster.CommStats
+
     @property
     def utilization(self) -> float:
         """Useful compute-time / (M × epoch wall-clock)."""
@@ -85,14 +148,49 @@ class EpochResult:
         return min(self.K / max(self.executed_tasks, 1e-12), 1.0)
 
 
+@dataclasses.dataclass
+class ComputePhase:
+    """Outcome of the compute half of a TSDCFL epoch, before any uplink.
+
+    ``ready_time[m]`` is the absolute (epoch-relative) wall-clock at which
+    worker ``m``'s coded partial gradient becomes available for upload
+    (``inf`` for workers that produce nothing: non-selected, cut at the
+    deadline without a stage-2 role, or faulted).
+    """
+    epoch: int
+    st1: object                       # Stage1Plan
+    st2: object                       # Stage2Plan
+    t1: np.ndarray                    # (M1,) sampled stage-1 times
+    tasks1: np.ndarray
+    finished: np.ndarray              # (M1,) bool — finished by T_comp
+    T_comp: float
+    stage1_time: float
+    t2: Optional[np.ndarray]          # (n_active,) stage-2 times, None if
+    tasks2: Optional[np.ndarray]      # stage 2 was not triggered
+    ready_time: np.ndarray            # (M,) gradient-ready wall-clock
+    stage1_total_task_time: float
+    stage1_useful: float
+    stage1_executed: float
+
+    @property
+    def triggered(self) -> bool:
+        return self.st2.triggered
+
+
 class TwoStageRuntime:
-    """Per-epoch TSDCFL control: plan stage 1 → observe → plan stage 2."""
+    """Per-epoch TSDCFL control: plan stage 1 → observe → plan stage 2.
+
+    When ``engine`` (a ``repro.sim.events.EventEngine``) is supplied, all
+    completion-time sampling draws from the engine's RNG stream so the
+    compute phase and the communication phase of a co-simulation share one
+    randomness source.
+    """
 
     def __init__(self, M: int, K: int, M1: int, *, rates: np.ndarray,
                  noise_scale: float = 0.2, fault_prob: float = 0.0,
                  straggler_prob: float = 0.0, straggler_slow: float = 8.0,
                  deadline_quantile: float = 0.9, n_slots: int = 0,
-                 seed: int = 0, select: str = "rotate"):
+                 seed: int = 0, select: str = "rotate", engine=None):
         self.M, self.K, self.M1 = M, K, M1
         self.planner = TwoStagePlanner(M, K, M1, select=select, seed=seed)
         self.predictor = StragglerPredictor(M)
@@ -101,10 +199,13 @@ class TwoStageRuntime:
             straggler_prob, straggler_slow)
         self.deadline_quantile = deadline_quantile
         self.n_slots = n_slots or None
-        self._rng = np.random.default_rng(seed + 1)
+        self.engine = engine
+        self._rng = (engine.rng if engine is not None
+                     else np.random.default_rng(seed + 1))
 
     # ------------------------------------------------------------------ #
-    def run_epoch(self, epoch: int) -> EpochResult:
+    def compute_phase(self, epoch: int) -> ComputePhase:
+        """Plan + sample the compute half of the epoch (no decode yet)."""
         M, K = self.M, self.K
         speeds = self.predictor.speeds()
         st1 = self.planner.plan_stage1(epoch, speeds)
@@ -128,63 +229,106 @@ class TwoStageRuntime:
             n_active=M - int(finished.sum()), s_min=1)
         st2 = self.planner.plan_stage2(st1, finished, s_hat, speeds)
 
+        stage1_time = float(min(np.max(t1[finished], initial=0.0), T_comp)) \
+            if finished.any() else T_comp
+        if not finished.all():
+            stage1_time = T_comp
+        stage1_total = float(np.sum(np.minimum(t1, T_comp)))
+        stage1_useful = float(np.sum(t1[finished]))
+        # partition-copies executed by the deadline (partial work counts)
+        stage1_executed = float(np.sum(tasks1 * np.minimum(t1, T_comp)
+                                       / np.maximum(t1, 1e-12)))
+
+        ready = np.full(M, np.inf)
+        ready[st1.workers[finished]] = t1[finished]
+        t2 = tasks2 = None
+        if st2.triggered:
+            tasks2 = st2.scheme.copies_per_worker
+            t2 = self.time_model.sample(st2.active_workers, tasks2,
+                                        self._rng)
+            ready[st2.active_workers] = np.where(
+                np.isfinite(t2), stage1_time + t2, np.inf)
+        return ComputePhase(
+            epoch=epoch, st1=st1, st2=st2, t1=t1, tasks1=tasks1,
+            finished=finished, T_comp=T_comp, stage1_time=stage1_time,
+            t2=t2, tasks2=tasks2, ready_time=ready,
+            stage1_total_task_time=stage1_total,
+            stage1_useful=stage1_useful, stage1_executed=stage1_executed)
+
+    # ------------------------------------------------------------------ #
+    def _assemble(self, ph: ComputePhase, alive2: Optional[np.ndarray],
+                  stage2_cutoff: float, *, time: float,
+                  compute_time: float, comm_time: float,
+                  comm=None, arrived1: Optional[np.ndarray] = None
+                  ) -> EpochResult:
+        """Decode + bookkeeping shared by the legacy and co-sim paths.
+
+        ``alive2`` is the stage-2 alive mask used for the decode (ignored
+        when stage 2 never triggered); ``stage2_cutoff`` bounds the partial
+        work counted as executed during stage 2.  ``arrived1`` masks the
+        stage-1 finishers whose payload actually reached the server (None
+        = all of them, the instant-uplink semantics).
+        """
+        M, K = self.M, self.K
+        st1, st2 = ph.st1, ph.st2
         schemes = []
         decode_w_global = np.zeros(M)
+        decode_ok = True
         # stage-1 finishers: uncoded contribution, weight 1
-        fin_rows = np.flatnonzero(finished)
+        fin_rows = np.flatnonzero(ph.finished)
         if len(fin_rows):
             B_fin = st1.scheme.B[fin_rows]
             schemes.append(CodingScheme(
                 B=B_fin, s=0, kind="uncoded",
                 workers=st1.workers[fin_rows],
                 partitions=st1.partitions))
-            decode_w_global[st1.workers[fin_rows]] = 1.0
+            fin_got = (np.ones(len(fin_rows), bool) if arrived1 is None
+                       else np.asarray(arrived1, bool))
+            decode_w_global[st1.workers[fin_rows[fin_got]]] = 1.0
+            if not fin_got.all():
+                decode_ok = False
 
-        stage1_time = float(min(np.max(t1[finished], initial=0.0), T_comp)) \
-            if finished.any() else T_comp
-        if not finished.all():
-            stage1_time = T_comp
-        total_task_time = float(np.sum(np.minimum(t1, T_comp)))
-        useful = float(np.sum(t1[finished]))
-        # partition-copies executed by the deadline (partial work counts)
-        executed = float(np.sum(tasks1 * np.minimum(t1, T_comp)
-                                / np.maximum(t1, 1e-12)))
-        time = stage1_time
+        total_task_time = ph.stage1_total_task_time
+        useful = ph.stage1_useful
+        executed = ph.stage1_executed
         n_straggle = 0
 
         if st2.triggered:
-            scheme2 = st2.scheme
-            tasks2 = scheme2.copies_per_worker
-            t2 = self.time_model.sample(st2.active_workers, tasks2,
-                                        self._rng)
-            # synchronous semantics: wait for the fastest (n_active - s)
+            scheme2, t2, tasks2 = st2.scheme, ph.t2, ph.tasks2
             n_active = scheme2.M
-            s = scheme2.s
-            order = np.argsort(np.where(np.isfinite(t2), t2, np.inf))
-            need = n_active - s
-            alive = np.zeros(n_active, bool)
-            alive[order[:need]] = True
-            alive &= np.isfinite(t2)
-            stage2_time = float(np.max(t2[alive], initial=0.0))
-            a2 = decode_weights(scheme2, alive)
+            try:
+                a2 = decode_weights(scheme2, alive2)
+            except ValueError:
+                a2 = np.zeros(n_active)
+                decode_ok = False
             decode_w_global[st2.active_workers] = a2
             schemes.append(scheme2)
-            n_straggle = int(n_active - alive.sum())
-            time = stage1_time + stage2_time
+            n_straggle = int(n_active - alive2.sum())
             total_task_time += float(np.sum(np.minimum(
-                t2, np.where(np.isfinite(t2), t2, stage2_time))))
+                t2, np.where(np.isfinite(t2), t2, stage2_cutoff))))
             t2f = np.where(np.isfinite(t2), t2, np.inf)
             executed += float(np.sum(
-                tasks2 * np.minimum(t2f, stage2_time)
+                tasks2 * np.minimum(t2f, stage2_cutoff)
                 / np.maximum(t2f, 1e-12)))
             # useful work: alive workers' coded tasks that enter the decode
-            useful += float(np.sum(t2[alive]))
+            useful += float(np.sum(t2[alive2]))
             self.predictor.update_times(
-                st2.active_workers[alive],
-                (t2 / np.maximum(tasks2, 1))[alive])
+                st2.active_workers[alive2],
+                (t2 / np.maximum(tasks2, 1))[alive2])
 
         self.predictor.update_straggler_count(n_straggle)
-        plan = build_slot_plan(schemes, M, self.n_slots)
+        try:
+            plan = build_slot_plan(schemes, M, self.n_slots)
+        except ValueError:
+            # the predictor's s_hat can exceed the static slot bound in
+            # pathological epochs — auto-size rather than crash (costs one
+            # re-jit of the train step for that width)
+            plan = build_slot_plan(schemes, M, None)
+        if not decode_ok:
+            # failed epoch (decoder.py contract): without a full decode the
+            # weighted gradient would be a *biased* partial sum — zero every
+            # weight so the step is an exact no-op, flagged via decode_ok.
+            decode_w_global[:] = 0.0
         w = slot_weights(plan, decode_w_global)
         red = plan.slot_coeff[plan.slot_partition >= 0].size / max(K, 1)
         return EpochResult(plan=plan, weights=w, time=time,
@@ -192,14 +336,98 @@ class TwoStageRuntime:
                            total_task_time=total_task_time,
                            n_stragglers=n_straggle,
                            stage2_triggered=st2.triggered, redundancy=red,
-                           executed_tasks=executed, K=K, M=M)
+                           executed_tasks=executed, K=K, M=M,
+                           compute_time=compute_time, comm_time=comm_time,
+                           decode_ok=decode_ok, comm=comm)
+
+    # ------------------------------------------------------------------ #
+    def run_epoch(self, epoch: int) -> EpochResult:
+        """Legacy instant-uplink epoch: decode as soon as enough workers
+        have *computed* (synchronous wait for the fastest n_active − s)."""
+        ph = self.compute_phase(epoch)
+        time = ph.stage1_time
+        alive2 = None
+        stage2_cutoff = 0.0
+        if ph.triggered:
+            t2 = ph.t2
+            n_active = ph.st2.scheme.M
+            s = ph.st2.scheme.s
+            order = np.argsort(np.where(np.isfinite(t2), t2, np.inf))
+            need = n_active - s
+            alive2 = np.zeros(n_active, bool)
+            alive2[order[:need]] = True
+            alive2 &= np.isfinite(t2)
+            stage2_cutoff = float(np.max(t2[alive2], initial=0.0))
+            time = ph.stage1_time + stage2_cutoff
+        return self._assemble(ph, alive2, stage2_cutoff, time=time,
+                              compute_time=time, comm_time=0.0)
+
+    # ------------------------------------------------------------------ #
+    def result_from_phase(self, ph: ComputePhase, arrived: np.ndarray,
+                          decode_time: float, comm=None) -> EpochResult:
+        """Co-simulated epoch: decode from the set whose coded partial
+        gradients *arrived* through the scheduled uplink by ``decode_time``.
+
+        Args:
+          arrived: bool (M,) — workers whose full gradient payload reached
+            the server.
+          decode_time: wall-clock at which the decodable set completed
+            arrival (the epoch's end-to-end time).
+          comm: CommStats attached to the result.
+        """
+        arrived = np.asarray(arrived, bool)
+        alive2 = None
+        compute_time = ph.stage1_time
+        stage2_cutoff = 0.0
+        if ph.triggered:
+            alive2 = arrived[ph.st2.active_workers]
+            # arrived ⟹ computed, so t2 is finite on alive2
+            stage2_cutoff = max(decode_time - ph.stage1_time, 0.0)
+            compute_time = ph.stage1_time + float(
+                np.max(ph.t2[alive2], initial=0.0))
+        # (no stage-2: the compute phase ends at stage1_time regardless of
+        # which finishers' payloads arrived — the deadline bounds it)
+        comm_time = max(decode_time - compute_time, 0.0)
+        arrived1 = arrived[ph.st1.workers[ph.finished]]
+        return self._assemble(ph, alive2, stage2_cutoff,
+                              time=compute_time + comm_time,
+                              compute_time=compute_time,
+                              comm_time=comm_time, comm=comm,
+                              arrived1=arrived1)
+
+    # ------------------------------------------------------------------ #
+    def decode_requirements(self, ph: ComputePhase):
+        """(must_arrive, stage2_workers, n_needed2) for the arrival gate.
+
+        Decode fires once every stage-1 finisher's gradient has arrived
+        (their partitions are uniquely covered) and, when stage 2 was
+        triggered, at least ``n_active − s`` stage-2 gradients arrived.
+        """
+        must = ph.st1.workers[ph.finished]
+        if ph.triggered:
+            sch = ph.st2.scheme
+            return must, ph.st2.active_workers, sch.M - sch.s
+        return must, np.zeros(0, int), 0
 
 
 # --------------------------------------------------------------------- #
+def single_stage_accounting(t: np.ndarray, tasks: np.ndarray,
+                            alive: np.ndarray, cutoff: float
+                            ) -> tuple[float, float, float]:
+    """(useful, total, executed) task-time accounting for a single-stage
+    epoch — shared by the instant-uplink baseline and the co-simulator so
+    the utilization/efficiency metrics cannot drift between paths."""
+    tf = np.where(np.isfinite(t), t, np.inf)
+    useful = float(np.sum(t[alive]))
+    total = float(np.sum(np.minimum(tf, cutoff)))
+    executed = float(np.sum(tasks * np.minimum(tf, cutoff)
+                            / np.maximum(tf, 1e-12)))
+    return useful, total, executed
+
+
 def simulate_epoch_single_stage(scheme: CodingScheme,
                                 time_model: CompletionTimeModel,
-                                rng: np.random.Generator,
-                                wait_for: Optional[int] = None) -> dict:
+                                rng, wait_for: Optional[int] = None) -> dict:
     """Baseline epoch (CRS/FRS/uncoded): all M workers start together.
 
     Returns decode weights, epoch time (wait for M-s fastest), utilization
@@ -221,11 +449,7 @@ def simulate_epoch_single_stage(scheme: CodingScheme,
         a = np.zeros(M)
         ok = False
         time = float(np.max(np.where(np.isfinite(t), t, 0.0)))
-    useful = float(np.sum(t[alive]))
-    total = float(np.sum(np.minimum(np.where(np.isfinite(t), t, time), time)))
-    tf = np.where(np.isfinite(t), t, np.inf)
-    executed = float(np.sum(tasks * np.minimum(tf, time)
-                            / np.maximum(tf, 1e-12)))
+    useful, total, executed = single_stage_accounting(t, tasks, alive, time)
     return {"decode_w": a, "time": time, "alive": alive, "ok": ok,
             "useful_task_time": useful, "total_task_time": total,
             "redundancy": scheme.redundancy, "executed_tasks": executed}

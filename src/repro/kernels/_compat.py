@@ -1,0 +1,20 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+The TPU compiler-params dataclass was renamed across JAX releases:
+``pltpu.TPUCompilerParams`` (jax <= 0.5.x) became ``pltpu.CompilerParams``
+(jax >= 0.6).  Kernels import :func:`tpu_compiler_params` so the same source
+builds against either spelling.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["tpu_compiler_params"]
+
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params object under either JAX spelling."""
+    return _PARAMS_CLS(**kwargs)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 __all__ = ["coded_reduce_kernel", "coded_reduce_pallas"]
 
 
@@ -45,7 +47,7 @@ def coded_reduce_pallas(g, w, *, block_d: int = 512,
         ],
         out_specs=pl.BlockSpec((1, block_d), lambda di: (0, di)),
         out_shape=jax.ShapeDtypeStruct((1, D), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(g, w.reshape(n_slots, 1))

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 __all__ = ["rglru_scan_kernel", "rglru_scan_pallas"]
 
 
@@ -77,7 +79,7 @@ def rglru_scan_pallas(a, b, *, block_s: int = 256, block_d: int = 128,
             jax.ShapeDtypeStruct((B, 1, D), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

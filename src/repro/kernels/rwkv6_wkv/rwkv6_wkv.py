@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 __all__ = ["wkv_kernel", "wkv_pallas"]
 
 
@@ -104,7 +106,7 @@ def wkv_pallas(r, k, v, w, u, *, chunk: int = 32, interpret: bool = True):
             jax.ShapeDtypeStruct((B * H, K, V), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rf, kf, vf, wf, uf)

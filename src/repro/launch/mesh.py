@@ -8,8 +8,21 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh_from_str", "batch_axes",
-           "data_shards"]
+__all__ = ["abstract_mesh", "make_production_mesh", "make_mesh_from_str",
+           "batch_axes", "data_shards"]
+
+
+def abstract_mesh(axis_sizes: tuple, axis_names: tuple):
+    """Version-compat ``AbstractMesh`` constructor.
+
+    jax <= 0.4.x takes a single ``((name, size), ...)`` shape tuple;
+    jax >= 0.5 takes ``(axis_sizes, axis_names)``.  Device-free either way.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

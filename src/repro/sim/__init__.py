@@ -1,0 +1,22 @@
+"""Event-driven edge-cluster co-simulator (DESIGN.md §3).
+
+Couples the two-stage coded computing phase (paper §3) with the fair
+Lyapunov-scheduled transmission phase (paper §4) inside one epoch:
+stage-1 coded compute → deadline → stage-2 planning → per-slot
+drift-plus-penalty uplink of each worker's partial-gradient bytes → decode
+once enough coded contributions have *arrived* (not merely been computed).
+"""
+from .events import Event, EventEngine, COMPUTE_DONE, SLOT_TICK
+from .channel import (ChannelModel, GilbertElliottChannel, StaticChannel,
+                      TraceChannel)
+from .cluster import CommParams, CommStats, EdgeCluster
+from .scenarios import available_scenarios, get_scenario, make_cluster
+from .montecarlo import FleetSummary, compare_schemes, run_fleet
+
+__all__ = [
+    "Event", "EventEngine", "COMPUTE_DONE", "SLOT_TICK",
+    "ChannelModel", "StaticChannel", "GilbertElliottChannel", "TraceChannel",
+    "CommParams", "CommStats", "EdgeCluster",
+    "available_scenarios", "get_scenario", "make_cluster",
+    "FleetSummary", "run_fleet", "compare_schemes",
+]

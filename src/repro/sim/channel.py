@@ -1,0 +1,89 @@
+"""Per-slot uplink rate models for the co-simulator.
+
+Replaces the bare ``rates`` array the Lyapunov benchmarks fed into
+``Observation.r``: a channel model produces the (M,) vector of per-worker
+uplink capacities (bytes per unit time) for each slot, optionally evolving
+internal state.  All randomness draws from the RNG handed in per slot (the
+event engine's stream), so one seed reproduces the whole epoch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["ChannelModel", "StaticChannel", "GilbertElliottChannel",
+           "TraceChannel"]
+
+
+class ChannelModel:
+    """Base: per-slot uplink rates for M workers."""
+
+    M: int
+
+    def reset(self, rng: np.random.Generator) -> None:
+        """Re-initialize internal state at the start of an epoch."""
+
+    def slot_rates(self, slot: int, rng: np.random.Generator) -> np.ndarray:
+        """(M,) uplink capacities for slot ``slot`` (and advance state)."""
+        raise NotImplementedError
+
+
+class StaticChannel(ChannelModel):
+    """Time-invariant rates (the pre-co-sim behaviour, kept as a model)."""
+
+    def __init__(self, rates: np.ndarray):
+        self._rates = np.asarray(rates, np.float64)
+        self.M = len(self._rates)
+
+    def slot_rates(self, slot: int, rng: np.random.Generator) -> np.ndarray:
+        return self._rates.copy()
+
+
+class GilbertElliottChannel(ChannelModel):
+    """Two-state Markov fading: each worker's link flips between a GOOD
+    rate and a BAD (deep-fade) rate with per-slot transition probabilities
+    ``p_gb`` (good→bad) and ``p_bg`` (bad→good) — the classic bursty-loss
+    model, per worker independently.
+    """
+
+    def __init__(self, rate_good: np.ndarray, rate_bad: np.ndarray,
+                 p_gb: float = 0.1, p_bg: float = 0.3,
+                 start_good: bool = True):
+        self.rate_good = np.atleast_1d(np.asarray(rate_good, np.float64))
+        self.rate_bad = np.broadcast_to(
+            np.asarray(rate_bad, np.float64), self.rate_good.shape).copy()
+        self.M = len(self.rate_good)
+        self.p_gb = float(p_gb)
+        self.p_bg = float(p_bg)
+        self._start_good = start_good
+        self._good = np.full(self.M, start_good, bool)
+
+    def reset(self, rng: np.random.Generator) -> None:
+        if self._start_good:
+            self._good = np.ones(self.M, bool)
+        else:  # draw from the stationary distribution
+            p_good = self.p_bg / max(self.p_gb + self.p_bg, 1e-12)
+            self._good = rng.random(self.M) < p_good
+
+    def slot_rates(self, slot: int, rng: np.random.Generator) -> np.ndarray:
+        r = np.where(self._good, self.rate_good, self.rate_bad)
+        flip = rng.random(self.M)
+        self._good = np.where(self._good, flip >= self.p_gb,
+                              flip < self.p_bg)
+        return r
+
+
+class TraceChannel(ChannelModel):
+    """Trace-driven rates: row ``t`` of a (T, M) trace is slot ``t``'s rate
+    vector; the trace loops (or holds its last row with ``loop=False``).
+    Models measured/adversarial conditions such as a flash-crowd collapse.
+    """
+
+    def __init__(self, trace: np.ndarray, loop: bool = True):
+        self.trace = np.atleast_2d(np.asarray(trace, np.float64))
+        self.M = self.trace.shape[1]
+        self.loop = loop
+
+    def slot_rates(self, slot: int, rng: np.random.Generator) -> np.ndarray:
+        T = self.trace.shape[0]
+        idx = slot % T if self.loop else min(slot, T - 1)
+        return self.trace[idx].copy()

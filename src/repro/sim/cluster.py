@@ -1,0 +1,326 @@
+"""EdgeCluster: closed-loop co-simulation of one TSDCFL epoch.
+
+Couples the two phases the paper analyses separately:
+
+  compute phase (paper §3)
+      ``TwoStageRuntime.compute_phase`` — stage-1 coded compute → deadline →
+      stage-2 planning, producing per-worker *gradient-ready* times (or, for
+      the CRS/FRS/uncoded baselines, a single-stage static scheme).
+
+  communication phase (paper §4)
+      Each ready worker's coded partial gradient (``grad_bytes``) is offered
+      to the drift-plus-penalty scheduler as the ``D_m`` arrival of
+      ``schedule_slot``; per slot the channel model supplies ``r_m(t)``, the
+      harvest model ``E^H_m(t)``, and the P4–P7 closed forms decide
+      admission, energy intake and transmission time.  Bytes drain through
+      the ``Q_m`` backlog queues.
+
+  decode
+      Fires at the end of the first slot by which enough coded
+      contributions have *arrived* (every stage-1 finisher + at least
+      ``n_active − s`` stage-2 workers; for static schemes, any alive set
+      ``decode_weights`` accepts) — not merely been computed.
+
+The heap-based :class:`~repro.sim.events.EventEngine` merges continuous
+compute-completion events into the slotted comm timeline and owns the one
+RNG stream behind completion sampling, fading and harvest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coded_step import build_slot_plan, slot_weights
+from repro.core.coding import CodingScheme, decode_weights
+from repro.core.lyapunov import (Observation, SystemParams, init_queues,
+                                 schedule_slot)
+from repro.core.runtime import (EpochResult, build_epoch_backend,
+                                single_stage_accounting)
+from repro.sim.channel import ChannelModel, StaticChannel
+from repro.sim.events import COMPUTE_DONE, SLOT_TICK, EventEngine
+
+__all__ = ["CommParams", "CommStats", "EdgeCluster"]
+
+SCHEMES = ("two-stage", "cyclic", "fractional", "uncoded")
+
+_SLOT_STEP = jax.jit(schedule_slot)
+
+
+@dataclasses.dataclass
+class CommParams:
+    """Physics of the uplink phase (paper §III.3 symbols + sim knobs)."""
+    grad_bytes: float = 1.0        # payload per coded partial gradient
+    slot_T: float = 0.1            # slot length (time units)
+    n_subchannels: float = 2.0     # L(t): simultaneous uplink sub-channels
+    V: float = 50.0                # Lyapunov trade-off knob
+    tx_power: float = 0.5          # p_m — energy per unit transmission time
+    E0: float = 5.0                # initial battery
+    E_cap: float = 10.0            # battery capacity
+    harvest_mean: float = 0.5      # mean harvestable energy per slot
+    harvest_jitter: float = 0.5    # E_H ~ U(mean·(1−j), mean·(1+j))
+    xi: float = 0.01               # server cycles per uploaded byte
+    F: float = 100.0               # server cycles per slot
+    f_max: float = 100.0           # worker cycles per slot (unused backlog)
+    delta: float = 1e-3            # energy per worker cycle
+    max_slots: int = 5000          # hard cap on comm slots per epoch
+
+
+@dataclasses.dataclass
+class CommStats:
+    """Per-epoch accounting of the communication phase (per-worker arrays
+    are length M).  Conservation invariant (tested):
+    ``bytes_admitted == bytes_transmitted + queue_residual`` per worker."""
+    n_slots: int
+    decode_time: float
+    decode_ok: bool
+    arrived: np.ndarray            # (M,) bool — full payload reached server
+    bytes_offered: np.ndarray      # (M,) gradient bytes that became ready
+    bytes_admitted: np.ndarray     # (M,) admitted into Q_m (P5)
+    bytes_transmitted: np.ndarray  # (M,) drained from Q_m over the air
+    queue_residual: np.ndarray     # (M,) final Q_m backlog
+    pending_residual: np.ndarray   # (M,) ready bytes never admitted
+    min_energy: float              # min over slots/workers of battery level
+    max_overdraft: float           # max of (e_up+e_com − E_before); ≤ 0 ⟹
+    final_energy: np.ndarray       # (M,)              never overspends
+    idle_slots: int                # slots with no admission/transmission
+
+
+class EdgeCluster:
+    """One (scheme × scenario) co-simulated edge cluster.
+
+    Produces :class:`~repro.core.runtime.EpochResult` objects whose
+    ``time`` is the end-to-end wall-clock (compute ∥ scheduled uplink) with
+    a ``compute_time`` / ``comm_time`` breakdown, plus a slot plan +
+    decode-weight matrix a trainer can step with.
+    """
+
+    def __init__(self, M: int, K: int, *, scheme: str = "two-stage",
+                 M1: Optional[int] = None, s: int = 1,
+                 rates: Optional[np.ndarray] = None,
+                 noise_scale: float = 0.2, fault_prob: float = 0.0,
+                 straggler_prob: float = 0.0, straggler_slow: float = 8.0,
+                 deadline_quantile: float = 0.9,
+                 channel: Optional[ChannelModel] = None,
+                 comm: Optional[CommParams] = None,
+                 n_slots: Optional[int] = None, seed: int = 0,
+                 select: str = "rotate"):
+        if scheme not in SCHEMES:
+            raise ValueError(f"scheme must be one of {SCHEMES}, got {scheme}")
+        self.M, self.K, self.s = M, K, s
+        self.scheme = scheme
+        self.comm = comm or CommParams()
+        self.channel = channel or StaticChannel(np.full(M, 10.0))
+        if self.channel.M != M:
+            raise ValueError(f"channel has {self.channel.M} workers, "
+                             f"cluster has {M}")
+        self.engine = EventEngine(seed)
+        rates = np.asarray(rates if rates is not None else np.ones(M),
+                           np.float64)
+        self.rates = rates
+
+        self.runtime, self.static_scheme, self.time_model, self.n_slots = \
+            build_epoch_backend(
+                scheme, M, K, M1=M1, s=s, rates=rates,
+                noise_scale=noise_scale, fault_prob=fault_prob,
+                straggler_prob=straggler_prob,
+                straggler_slow=straggler_slow, seed=seed, n_slots=n_slots,
+                deadline_quantile=deadline_quantile, select=select,
+                engine=self.engine)
+
+        cp = self.comm
+        self.grad_bytes = np.broadcast_to(
+            np.asarray(cp.grad_bytes, np.float64), (M,)).copy()
+        self.sys_params = SystemParams(
+            T=cp.slot_T,
+            p=jnp.full((M,), cp.tx_power),
+            delta=jnp.full((M,), cp.delta),
+            xi=jnp.full((M,), cp.xi),
+            f_max=jnp.full((M,), cp.f_max),
+            F=cp.F,
+            E_cap=jnp.full((M,), cp.E_cap),
+            V=cp.V,
+            lam=jnp.ones((M,)))
+        self._L = jnp.asarray(cp.n_subchannels, jnp.float32)
+        self._zeros = jnp.zeros((M,))
+
+    def _slot_fn(self, state, obs):
+        # SystemParams is a registered pytree, so this shares one compiled
+        # schedule_slot across every cluster with the same worker count.
+        return _SLOT_STEP(state, self.sys_params, obs)
+
+    # ------------------------------------------------------------------ #
+    def run_epoch(self, epoch: int) -> EpochResult:
+        """One co-simulated epoch: compute → scheduled uplink → decode."""
+        if self.scheme == "two-stage":
+            ph = self.runtime.compute_phase(epoch)
+            must, w2, need2 = self.runtime.decode_requirements(ph)
+
+            def decodable(arrived: np.ndarray) -> bool:
+                if len(must) == 0 and need2 == 0:
+                    return False  # nothing ever computed
+                if not arrived[must].all():
+                    return False
+                if need2:
+                    if int(arrived[w2].sum()) < need2:
+                        return False
+                    try:  # the count gate is necessary, not sufficient
+                        decode_weights(ph.st2.scheme, arrived[w2])
+                    except ValueError:
+                        return False
+                return True
+
+            stats = self._run_comm(ph.ready_time, decodable)
+            # decodability is monotone in arrivals and gated per slot, so a
+            # forced stop implies result_from_phase's own decode fails (or a
+            # finisher is missing) — decode_ok needs no override here.
+            return self.runtime.result_from_phase(
+                ph, stats.arrived, stats.decode_time, comm=stats)
+
+        # --- static single-stage baselines ----------------------------- #
+        scheme = self.static_scheme
+        tasks = scheme.copies_per_worker
+        t = self.engine.sample_completion(self.time_model,
+                                          np.arange(self.M), tasks)
+
+        def decodable(arrived: np.ndarray) -> bool:
+            # no count precheck: FRS can decode with fewer than M - s
+            # arrivals (one representative per group suffices)
+            if not arrived.any():
+                return False
+            try:
+                decode_weights(scheme, arrived)
+                return True
+            except ValueError:
+                return False
+
+        stats = self._run_comm(t, decodable)
+        return self._static_result(scheme, t, tasks, stats)
+
+    # ------------------------------------------------------------------ #
+    def _static_result(self, scheme: CodingScheme, t: np.ndarray,
+                       tasks: np.ndarray, stats: CommStats) -> EpochResult:
+        M = self.M
+        alive = stats.arrived
+        try:
+            a = decode_weights(scheme, alive)
+            ok = True
+        except ValueError:
+            a = np.zeros(M)
+            ok = False
+        decode_time = stats.decode_time
+        compute_time = float(np.max(t[alive], initial=0.0))
+        if not alive.any():
+            compute_time = float(np.max(np.where(np.isfinite(t), t, 0.0),
+                                        initial=0.0))
+        comm_time = max(decode_time - compute_time, 0.0)
+        useful, total, executed = single_stage_accounting(
+            t, tasks, alive, decode_time)
+        plan = build_slot_plan([scheme], M, self.n_slots)
+        w = slot_weights(plan, a)
+        return EpochResult(
+            plan=plan, weights=w, time=compute_time + comm_time,
+            useful_task_time=useful, total_task_time=total,
+            n_stragglers=int(M - alive.sum()), stage2_triggered=False,
+            redundancy=scheme.redundancy,
+            executed_tasks=executed, K=self.K, M=M,
+            compute_time=compute_time, comm_time=comm_time,
+            decode_ok=ok, comm=stats)
+
+    # ------------------------------------------------------------------ #
+    def _run_comm(self, ready_time: np.ndarray,
+                  is_decodable: Callable[[np.ndarray], bool]) -> CommStats:
+        """Drain gradient payloads through the Lyapunov scheduler slot by
+        slot until the decodable set has arrived (or progress is provably
+        impossible / the slot cap fires)."""
+        M, cp, eng = self.M, self.comm, self.engine
+        T = cp.slot_T
+        eng.clear()
+        eng.reset_clock()
+        self.channel.reset(eng.rng)
+
+        outstanding = 0
+        for m in np.flatnonzero(np.isfinite(ready_time)):
+            eng.schedule(float(ready_time[m]), COMPUTE_DONE, int(m))
+            outstanding += 1
+
+        state = init_queues(M, E0=cp.E0)
+        pending = np.zeros(M)      # ready at worker, not yet admitted
+        owed = np.zeros(M)         # total payload each worker must deliver
+        admitted = np.zeros(M)
+        delivered = np.zeros(M)
+        arrived = np.zeros(M, bool)
+        min_E = float(cp.E0)
+        max_overdraft = 0.0
+        idle_slots = 0
+        n_slots = 0
+        decode_ok = False
+        decode_time = 0.0
+
+        eng.schedule(0.0, SLOT_TICK, 0)
+        while not eng.empty():
+            ev = eng.pop()
+            if ev.kind == COMPUTE_DONE:
+                m = ev.payload
+                pending[m] += self.grad_bytes[m]
+                owed[m] += self.grad_bytes[m]
+                outstanding -= 1
+                continue
+
+            k = ev.payload                       # SLOT_TICK: decide slot k
+            r = self.channel.slot_rates(k, eng.rng)
+            jit = cp.harvest_jitter
+            e_h = cp.harvest_mean * eng.rng.uniform(
+                max(1.0 - jit, 0.0), 1.0 + jit, M)
+            obs = Observation(
+                D=jnp.asarray(pending, jnp.float32),
+                r=jnp.asarray(r, jnp.float32),
+                E_H=jnp.asarray(e_h, jnp.float32),
+                L=self._L, new_cycles=self._zeros)
+            E_before = np.asarray(state.E, np.float64)
+            state, dec = self._slot_fn(state, obs)
+            d = np.asarray(dec.d, np.float64)
+            c = np.asarray(dec.c, np.float64)
+            spend = np.asarray(dec.e_up, np.float64) \
+                + np.asarray(dec.e_com, np.float64)
+            max_overdraft = max(max_overdraft,
+                                float(np.max(spend - E_before)))
+            pending -= np.minimum(pending, d)
+            admitted += d
+            delivered += c
+            min_E = min(min_E, float(np.min(np.asarray(state.E))))
+            n_slots = k + 1
+            if float(d.sum()) <= 0 and float(c.sum()) <= 0:
+                idle_slots += 1
+
+            arrived = (owed > 0) & (delivered >= owed - 1e-6 * owed - 1e-12)
+            if is_decodable(arrived):
+                decode_ok = True
+                decode_time = (k + 1) * T
+                break
+            q_left = float(np.asarray(state.Q).sum())
+            tiny = 1e-6 * float(self.grad_bytes.max())
+            if (outstanding == 0 and pending.sum() <= tiny
+                    and q_left <= tiny):
+                # everything that will ever arrive has arrived — decode is
+                # impossible for this epoch (too many faults): force stop
+                decode_time = (k + 1) * T
+                break
+            if k + 1 >= cp.max_slots:
+                decode_time = (k + 1) * T
+                break
+            eng.schedule((k + 1) * T, SLOT_TICK, k + 1)
+
+        eng.clear()                              # drop unneeded computes
+        return CommStats(
+            n_slots=n_slots, decode_time=decode_time, decode_ok=decode_ok,
+            arrived=arrived, bytes_offered=owed.copy(),
+            bytes_admitted=admitted, bytes_transmitted=delivered,
+            queue_residual=np.asarray(state.Q, np.float64).copy(),
+            pending_residual=pending.copy(), min_energy=min_E,
+            max_overdraft=max_overdraft,
+            final_energy=np.asarray(state.E, np.float64).copy(),
+            idle_slots=idle_slots)

@@ -1,0 +1,93 @@
+"""Batched multi-seed co-simulation fleets with summary statistics.
+
+``run_fleet`` runs one (scenario × scheme) pair across ``n_seeds``
+independent clusters and aggregates the epoch results;
+``compare_schemes`` sweeps all four coding schemes under the same scenario
+and seed list so the comparison shares sampled conditions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.sim.cluster import SCHEMES
+from repro.sim.scenarios import make_cluster
+
+__all__ = ["FleetSummary", "run_fleet", "compare_schemes"]
+
+
+@dataclasses.dataclass
+class FleetSummary:
+    scenario: str
+    scheme: str
+    n_seeds: int
+    n_epochs: int
+    mean_time: float           # mean epoch wall-clock (compute + comm)
+    std_time: float
+    p50_time: float
+    p95_time: float
+    mean_compute_time: float
+    mean_comm_time: float
+    comm_fraction: float       # comm share of the epoch wall-clock
+    mean_utilization: float
+    mean_slots: float          # comm slots per epoch
+    decode_failure_rate: float
+    mean_stragglers: float
+
+    def row(self) -> str:
+        return (f"{self.scenario:<30s} {self.scheme:<10s} "
+                f"time={self.mean_time:6.3f}±{self.std_time:5.3f} "
+                f"(comp={self.mean_compute_time:6.3f} "
+                f"comm={self.mean_comm_time:6.3f} "
+                f"{100 * self.comm_fraction:4.1f}%) "
+                f"p95={self.p95_time:6.3f} slots={self.mean_slots:5.1f} "
+                f"fail={self.decode_failure_rate:.2f}")
+
+
+def run_fleet(scenario: str, scheme: str = "two-stage", *,
+              n_seeds: int = 8, n_epochs: int = 3, base_seed: int = 0,
+              **overrides) -> FleetSummary:
+    """Monte-Carlo fleet: ``n_seeds`` clusters × ``n_epochs`` epochs."""
+    if n_seeds < 1 or n_epochs < 1:
+        raise ValueError(f"need n_seeds >= 1 and n_epochs >= 1, got "
+                         f"n_seeds={n_seeds}, n_epochs={n_epochs}")
+    times, comp, comm, util, slots, strag = [], [], [], [], [], []
+    failures = 0
+    total = 0
+    for i in range(n_seeds):
+        cluster = make_cluster(scenario, scheme=scheme,
+                               seed=base_seed + 1000 * i, **overrides)
+        for e in range(n_epochs):
+            res = cluster.run_epoch(e)
+            total += 1
+            times.append(res.time)
+            comp.append(res.compute_time)
+            comm.append(res.comm_time)
+            util.append(res.utilization)
+            strag.append(res.n_stragglers)
+            slots.append(res.comm.n_slots if res.comm is not None else 0)
+            if not res.decode_ok:
+                failures += 1
+    t = np.asarray(times)
+    return FleetSummary(
+        scenario=scenario, scheme=scheme, n_seeds=n_seeds,
+        n_epochs=n_epochs,
+        mean_time=float(t.mean()), std_time=float(t.std()),
+        p50_time=float(np.percentile(t, 50)),
+        p95_time=float(np.percentile(t, 95)),
+        mean_compute_time=float(np.mean(comp)),
+        mean_comm_time=float(np.mean(comm)),
+        comm_fraction=float(np.mean(comm) / max(t.mean(), 1e-12)),
+        mean_utilization=float(np.mean(util)),
+        mean_slots=float(np.mean(slots)),
+        decode_failure_rate=failures / max(total, 1),
+        mean_stragglers=float(np.mean(strag)))
+
+
+def compare_schemes(scenario: str, schemes: Optional[Sequence[str]] = None,
+                    **kwargs) -> dict:
+    """All schemes under one scenario/seed list → {scheme: FleetSummary}."""
+    return {s: run_fleet(scenario, scheme=s, **kwargs)
+            for s in (schemes or SCHEMES)}

@@ -1,0 +1,157 @@
+"""Named co-simulation scenarios (DESIGN.md §3.3).
+
+Each scenario fixes a cluster's compute heterogeneity, channel model and
+energy physics; the coding scheme and seed stay free so all four schemes
+(two-stage / cyclic / fractional / uncoded) run under identical scenario
+conditions.  Scenario motivation follows the paper's "practical network
+conditions" evaluation plus the heterogeneous-rate and fading settings of
+hierarchical gradient coding (arXiv:2406.10831) and heterogeneous-straggler
+approximate coding (arXiv:2510.22539).
+
+    cluster = make_cluster("fading-uplink", scheme="two-stage", seed=3)
+    res = cluster.run_epoch(0)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.sim.channel import (GilbertElliottChannel, StaticChannel,
+                               TraceChannel)
+from repro.sim.cluster import CommParams, EdgeCluster
+
+__all__ = ["Scenario", "SCENARIOS", "register_scenario",
+           "available_scenarios", "get_scenario", "make_cluster"]
+
+# default cluster size: the paper's 6-node edge cluster, K == M partitions
+_M, _K = 6, 6
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    builder: Callable[..., EdgeCluster]
+
+
+SCENARIOS: dict = {}
+
+
+def register_scenario(name: str, description: str):
+    def deco(fn):
+        SCENARIOS[name] = Scenario(name=name, description=description,
+                                   builder=fn)
+        return fn
+    return deco
+
+
+def available_scenarios() -> list:
+    return sorted(SCENARIOS)
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"available: {available_scenarios()}") from None
+
+
+def make_cluster(name: str, scheme: str = "two-stage", seed: int = 0,
+                 **overrides) -> EdgeCluster:
+    """Build the named scenario's cluster for one scheme and seed."""
+    return get_scenario(name).builder(scheme=scheme, seed=seed, **overrides)
+
+
+def _cluster(scheme, seed, defaults: dict, over: dict) -> EdgeCluster:
+    """Merge a scenario's default physics with caller overrides — any
+    EdgeCluster kwarg (rates, channel, comm, noise_scale, fault_prob, …)
+    can be overridden per call."""
+    cfg = dict(defaults)
+    cfg.update(over)
+    M = cfg.pop("M", _M)
+    K = cfg.pop("K", _K)
+    cfg.setdefault("M1", max(M // 2 + 1, 1))
+    return EdgeCluster(M, K, scheme=scheme, seed=seed, **cfg)
+
+
+# --------------------------------------------------------------------- #
+@register_scenario(
+    "homogeneous",
+    "Equal compute rates, equal static uplinks — the control scenario.")
+def _homogeneous(scheme="two-stage", seed=0, **over):
+    return _cluster(scheme, seed, dict(
+        rates=np.full(_M, 4.0),
+        channel=StaticChannel(np.full(_M, 4.0)),
+        comm=CommParams(grad_bytes=1.0, slot_T=0.1, n_subchannels=2.0),
+        noise_scale=0.15), over)
+
+
+@register_scenario(
+    "heterogeneous-rates",
+    "Paper's 2/2/4/4/8/8 compute cluster plus a matching spread of uplink "
+    "capacities — slow compute correlates with slow links.")
+def _heterogeneous(scheme="two-stage", seed=0, **over):
+    return _cluster(scheme, seed, dict(
+        rates=np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0]),
+        channel=StaticChannel(np.array([1.5, 1.5, 3.0, 3.0, 6.0, 6.0])),
+        comm=CommParams(grad_bytes=1.0, slot_T=0.1, n_subchannels=2.0),
+        noise_scale=0.2), over)
+
+
+@register_scenario(
+    "bursty-stragglers",
+    "1–2 random 8x stragglers per epoch (paper's straggler injection) on a "
+    "healthy static network — stresses the stage-2 re-coding path.")
+def _bursty(scheme="two-stage", seed=0, **over):
+    return _cluster(scheme, seed, dict(
+        straggler_prob=0.25, straggler_slow=8.0,
+        rates=np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0]),
+        channel=StaticChannel(np.full(_M, 4.0)),
+        comm=CommParams(grad_bytes=1.0, slot_T=0.1, n_subchannels=2.0),
+        noise_scale=0.2), over)
+
+
+@register_scenario(
+    "fading-uplink",
+    "Gilbert–Elliott two-state fading: links burst between a good rate and "
+    "a deep fade — stresses the arrival-gated decode.")
+def _fading(scheme="two-stage", seed=0, **over):
+    return _cluster(scheme, seed, dict(
+        rates=np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0]),
+        channel=GilbertElliottChannel(
+            rate_good=np.full(_M, 5.0), rate_bad=np.full(_M, 0.25),
+            p_gb=0.15, p_bg=0.35, start_good=False),
+        comm=CommParams(grad_bytes=1.0, slot_T=0.1, n_subchannels=2.0),
+        noise_scale=0.2), over)
+
+
+@register_scenario(
+    "energy-harvesting-constrained",
+    "Tiny batteries replenished by a weak stochastic harvest; the P6/P7 "
+    "perturbed energy queues make the uplink the epoch bottleneck.")
+def _energy(scheme="two-stage", seed=0, **over):
+    return _cluster(scheme, seed, dict(
+        rates=np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0]),
+        channel=StaticChannel(np.full(_M, 4.0)),
+        comm=CommParams(grad_bytes=1.0, slot_T=0.1, n_subchannels=2.0,
+                        tx_power=4.0, E0=0.2, E_cap=1.0,
+                        harvest_mean=0.12, harvest_jitter=0.5),
+        noise_scale=0.2), over)
+
+
+@register_scenario(
+    "flash-crowd",
+    "Trace-driven congestion: uplink capacity collapses to 10% for a burst "
+    "of slots mid-epoch, then recovers (cross-traffic flash crowd).")
+def _flash_crowd(scheme="two-stage", seed=0, **over):
+    base = np.tile(np.array([1.5, 1.5, 3.0, 3.0, 6.0, 6.0]), (30, 1))
+    base[8:20] *= 0.1                       # the crowd arrives
+    # loop=False: one-shot collapse, last (healthy) row holds afterwards
+    return _cluster(scheme, seed, dict(
+        rates=np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0]),
+        channel=TraceChannel(base, loop=False),
+        comm=CommParams(grad_bytes=1.0, slot_T=0.1, n_subchannels=2.0),
+        noise_scale=0.2), over)

@@ -1,6 +1,8 @@
 """Unit + property tests for the gradient-coding control plane."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.coding import (CodingScheme, TwoStagePlanner,

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import ModelConfig
@@ -55,8 +57,8 @@ def test_random_config_trains_finite(cfg, seed):
 def test_specs_axes_are_known(cfg):
     """Every logical axis in model_specs has a sharding rule."""
     from repro.launch.sharding import rules_for
-    from jax.sharding import AbstractMesh
-    mesh = AbstractMesh((4, 4), ("data", "model"))
+    from repro.launch.mesh import abstract_mesh
+    mesh = abstract_mesh((4, 4), ("data", "model"))
     rules = rules_for(cfg, mesh)
     specs = tfm.model_specs(cfg)
     for s in jax.tree.leaves(specs,

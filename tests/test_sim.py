@@ -1,0 +1,273 @@
+"""Tests for the closed-loop edge-cluster co-simulator (repro.sim)."""
+import numpy as np
+import pytest
+
+from repro.sim import (COMPUTE_DONE, EventEngine, GilbertElliottChannel,
+                       StaticChannel, TraceChannel, available_scenarios,
+                       compare_schemes, make_cluster, run_fleet)
+from repro.sim.cluster import SCHEMES
+
+
+# --------------------------------------------------------------------- #
+# event engine
+# --------------------------------------------------------------------- #
+def test_event_engine_time_order_with_tie_break():
+    eng = EventEngine(seed=0)
+    eng.schedule(2.0, "b")
+    eng.schedule(1.0, "a")
+    eng.schedule(1.0, "c")        # same time as 'a', inserted later
+    kinds = [eng.pop().kind for _ in range(3)]
+    assert kinds == ["a", "c", "b"]
+    assert eng.now == 2.0
+
+
+def test_event_engine_rejects_past_and_resets():
+    eng = EventEngine(seed=0)
+    eng.schedule(1.0, "x")
+    eng.pop()
+    with pytest.raises(ValueError):
+        eng.schedule(0.5, "late")
+    eng.reset_clock()
+    assert eng.now == 0.0
+
+
+def test_event_engine_pop_until_merges_streams():
+    eng = EventEngine(seed=0)
+    for t in [0.05, 0.15, 0.25]:
+        eng.schedule(t, COMPUTE_DONE, t)
+    got = eng.pop_until(0.2)
+    assert [e.payload for e in got] == [0.05, 0.15]
+    assert eng.peek().time == 0.25
+
+
+def test_engine_delegated_sampling_is_reproducible():
+    from repro.core.runtime import CompletionTimeModel
+    model = CompletionTimeModel(np.array([2.0, 4.0]), noise_scale=0.3)
+    t_a = EventEngine(seed=7).sample_completion(
+        model, np.array([0, 1]), np.array([2.0, 2.0]))
+    t_b = EventEngine(seed=7).sample_completion(
+        model, np.array([0, 1]), np.array([2.0, 2.0]))
+    np.testing.assert_allclose(t_a, t_b)
+
+
+# --------------------------------------------------------------------- #
+# channel models
+# --------------------------------------------------------------------- #
+def test_gilbert_elliott_rates_stay_in_state_set():
+    rng = np.random.default_rng(0)
+    ch = GilbertElliottChannel(rate_good=np.full(4, 5.0),
+                               rate_bad=np.full(4, 0.25),
+                               p_gb=0.3, p_bg=0.3, start_good=False)
+    ch.reset(rng)
+    seen_bad = False
+    for t in range(200):
+        r = ch.slot_rates(t, rng)
+        assert set(np.unique(r)) <= {0.25, 5.0}
+        seen_bad |= bool((r == 0.25).any())
+    assert seen_bad  # fades actually happen
+
+
+def test_trace_channel_loops_and_holds():
+    trace = np.arange(6, dtype=float).reshape(3, 2)
+    rng = np.random.default_rng(0)
+    loop = TraceChannel(trace, loop=True)
+    hold = TraceChannel(trace, loop=False)
+    np.testing.assert_allclose(loop.slot_rates(4, rng), trace[1])
+    np.testing.assert_allclose(hold.slot_rates(10, rng), trace[2])
+
+
+def test_static_channel_constant():
+    ch = StaticChannel(np.array([1.0, 2.0]))
+    rng = np.random.default_rng(0)
+    np.testing.assert_allclose(ch.slot_rates(0, rng), ch.slot_rates(99, rng))
+
+
+# --------------------------------------------------------------------- #
+# scenario registry
+# --------------------------------------------------------------------- #
+def test_registry_has_the_six_shipped_scenarios():
+    assert set(available_scenarios()) >= {
+        "homogeneous", "heterogeneous-rates", "bursty-stragglers",
+        "fading-uplink", "energy-harvesting-constrained", "flash-crowd"}
+
+
+@pytest.mark.parametrize("name", sorted(
+    ["homogeneous", "heterogeneous-rates", "bursty-stragglers",
+     "fading-uplink", "energy-harvesting-constrained", "flash-crowd"]))
+def test_every_scenario_runs_an_epoch(name):
+    res = make_cluster(name, scheme="two-stage", seed=3).run_epoch(0)
+    assert np.isfinite(res.time) and res.time > 0
+    assert res.comm is not None and res.comm.n_slots > 0
+
+
+# --------------------------------------------------------------------- #
+# conservation invariants
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_bytes_conserved_admitted_equals_sent_plus_queued(scheme):
+    cluster = make_cluster("heterogeneous-rates", scheme=scheme, seed=11)
+    for epoch in range(3):
+        st = cluster.run_epoch(epoch).comm
+        # per-worker: admitted into Q == transmitted + still queued
+        np.testing.assert_allclose(
+            st.bytes_admitted, st.bytes_transmitted + st.queue_residual,
+            rtol=1e-4, atol=1e-5)
+        # offered == admitted + still pending at the worker
+        np.testing.assert_allclose(
+            st.bytes_offered, st.bytes_admitted + st.pending_residual,
+            rtol=1e-4, atol=1e-5)
+        # arrived workers delivered their full payload
+        assert (st.bytes_transmitted[st.arrived]
+                >= cluster.grad_bytes[st.arrived] * (1 - 1e-5)).all()
+
+
+def test_energy_never_negative_and_never_overdrawn():
+    cluster = make_cluster("energy-harvesting-constrained",
+                           scheme="two-stage", seed=5)
+    for epoch in range(3):
+        st = cluster.run_epoch(epoch).comm
+        assert st.min_energy >= -1e-9
+        assert st.max_overdraft <= 1e-6       # decisions never spend > E(t)
+        assert (st.final_energy >= -1e-9).all()
+
+
+def test_energy_scenario_is_actually_comm_bound():
+    res = make_cluster("energy-harvesting-constrained",
+                       scheme="two-stage", seed=5).run_epoch(0)
+    free = make_cluster("heterogeneous-rates",
+                        scheme="two-stage", seed=5).run_epoch(0)
+    assert res.comm_time > free.comm_time  # battery throttles the uplink
+
+
+# --------------------------------------------------------------------- #
+# decode exactness through a fading channel
+# --------------------------------------------------------------------- #
+def _per_partition_weight_sums(res):
+    sums = np.zeros(res.K)
+    for m in range(res.plan.M):
+        for s_ in range(res.plan.n_slots):
+            k = int(res.plan.slot_partition[m, s_])
+            if k >= 0:
+                sums[k] += res.weights[m, s_]
+    return sums
+
+
+@pytest.mark.parametrize("scheme", ["two-stage", "cyclic", "fractional"])
+def test_decode_exact_when_gradients_arrive_through_fading(scheme):
+    """Arrival-gated decode must still recover Σ_k g_k exactly: every
+    partition's total slot weight is 1."""
+    cluster = make_cluster("fading-uplink", scheme=scheme, seed=9)
+    for epoch in range(4):
+        res = cluster.run_epoch(epoch)
+        assert res.decode_ok, epoch
+        np.testing.assert_allclose(_per_partition_weight_sums(res), 1.0,
+                                   atol=1e-6)
+
+
+def test_decode_waits_for_arrival_not_compute():
+    """The decodable set has computed long before it has arrived: wall
+    clock must exceed the compute-only epoch time."""
+    cluster = make_cluster("flash-crowd", scheme="two-stage", seed=2)
+    res = cluster.run_epoch(0)
+    assert res.decode_ok
+    assert res.time > res.compute_time
+    assert res.time == pytest.approx(res.comm.decode_time)
+
+
+# --------------------------------------------------------------------- #
+# regression: two-stage epoch time now strictly includes communication
+# --------------------------------------------------------------------- #
+def test_two_stage_epoch_time_includes_nonzero_comm_component():
+    cluster = make_cluster("heterogeneous-rates", scheme="two-stage", seed=1)
+    for epoch in range(3):
+        res = cluster.run_epoch(epoch)
+        assert res.comm_time > 0.0
+        assert res.time == pytest.approx(res.compute_time + res.comm_time)
+        assert res.time > res.compute_time
+
+
+def test_legacy_instant_uplink_path_reports_zero_comm():
+    from repro.core.runtime import TwoStageRuntime
+    rt = TwoStageRuntime(6, 6, 4, rates=np.array([2., 2., 4., 4., 8., 8.]),
+                         noise_scale=0.2, seed=0)
+    res = rt.run_epoch(0)
+    assert res.comm_time == 0.0
+    assert res.time == pytest.approx(res.compute_time)
+
+
+# --------------------------------------------------------------------- #
+# all four schemes through the co-simulator + trainer integration
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("scenario", ["homogeneous", "fading-uplink"])
+def test_all_schemes_complete_under_cosim(scenario, scheme):
+    res = make_cluster(scenario, scheme=scheme, seed=21).run_epoch(0)
+    assert np.isfinite(res.time)
+    assert res.comm_time > 0.0
+    assert 0.0 <= res.utilization <= 1.0
+
+
+def test_trainer_through_cluster_matches_reference_trajectory():
+    import jax
+    from repro.core.fel import FELTrainer
+    from repro.data.pipeline import SyntheticClassificationDataset
+    from repro.models.mlp import init_mlp, per_slot_mlp_loss
+    from repro.optim import sgd_momentum
+
+    def trainer(scheme, cluster=None):
+        ds = SyntheticClassificationDataset(6, examples_per_partition=8,
+                                            dim=16, n_classes=4, seed=7)
+        params = init_mlp(jax.random.PRNGKey(0), dims=(16, 16, 4))
+        kw = ({"cluster": cluster} if cluster is not None
+              else {"M1": 4, "s": 1, "noise_scale": 0.0})
+        return FELTrainer(scheme, 6, 6, ds, per_slot_mlp_loss,
+                          sgd_momentum(lr=0.05), params, seed=0, **kw)
+
+    ref = trainer("uncoded")
+    ref.run(3)
+    tr = trainer("two-stage",
+                 cluster=make_cluster("heterogeneous-rates",
+                                      scheme="two-stage", seed=4))
+    logs = tr.run(3)
+    assert all(l.decode_ok for l in logs)
+    assert all(l.comm_time > 0 for l in logs)
+    for a, b in zip(jax.tree.leaves(ref.params), jax.tree.leaves(tr.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def test_trainer_rejects_mismatched_cluster():
+    import jax
+    from repro.core.fel import FELTrainer
+    from repro.data.pipeline import SyntheticClassificationDataset
+    from repro.models.mlp import init_mlp, per_slot_mlp_loss
+    from repro.optim import sgd_momentum
+    ds = SyntheticClassificationDataset(6, examples_per_partition=8,
+                                        dim=16, n_classes=4, seed=7)
+    params = init_mlp(jax.random.PRNGKey(0), dims=(16, 16, 4))
+    cluster = make_cluster("homogeneous", scheme="cyclic", seed=0)
+    with pytest.raises(ValueError):
+        FELTrainer("two-stage", 6, 6, ds, per_slot_mlp_loss,
+                   sgd_momentum(lr=0.05), params, cluster=cluster)
+    # sim-physics kwargs conflict with cluster= instead of being dropped
+    good = make_cluster("homogeneous", scheme="two-stage", seed=0)
+    with pytest.raises(ValueError, match="simulation physics"):
+        FELTrainer("two-stage", 6, 6, ds, per_slot_mlp_loss,
+                   sgd_momentum(lr=0.05), params, straggler_prob=0.5,
+                   cluster=good)
+
+
+# --------------------------------------------------------------------- #
+# monte-carlo fleets
+# --------------------------------------------------------------------- #
+def test_run_fleet_summary_statistics():
+    s = run_fleet("homogeneous", "two-stage", n_seeds=2, n_epochs=2)
+    assert s.mean_time > 0 and s.p95_time >= s.p50_time > 0
+    assert s.mean_time == pytest.approx(
+        s.mean_compute_time + s.mean_comm_time, rel=1e-6)
+    assert 0.0 < s.comm_fraction < 1.0
+    assert s.decode_failure_rate == 0.0
+
+
+def test_compare_schemes_covers_all_four():
+    out = compare_schemes("homogeneous", n_seeds=1, n_epochs=1)
+    assert set(out) == set(SCHEMES)
