@@ -1,9 +1,10 @@
 """Lyapunov fairness-transmission layer (paper §4.3)."""
 from .queues import QueueState, SystemParams, init_queues, step_queues
-from .scheduler import (Decisions, Observation, jain_index, run_horizon,
-                        schedule_slot)
+from .scheduler import (Decisions, Observation, batched_schedule_slot,
+                        jain_index, run_horizon, schedule_slot)
 
 __all__ = [
     "QueueState", "SystemParams", "init_queues", "step_queues",
-    "Decisions", "Observation", "jain_index", "run_horizon", "schedule_slot",
+    "Decisions", "Observation", "batched_schedule_slot", "jain_index",
+    "run_horizon", "schedule_slot",
 ]

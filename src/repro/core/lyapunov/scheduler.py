@@ -32,8 +32,8 @@ import jax.numpy as jnp
 
 from .queues import QueueState, SystemParams, step_queues
 
-__all__ = ["Observation", "Decisions", "schedule_slot", "run_horizon",
-           "jain_index"]
+__all__ = ["Observation", "Decisions", "schedule_slot",
+           "batched_schedule_slot", "run_horizon", "jain_index"]
 
 _LN2 = 0.6931471805599453
 
@@ -126,6 +126,17 @@ def schedule_slot(state: QueueState, params: SystemParams, obs: Observation,
                             new_cycles=obs.new_cycles)
     return new_state, Decisions(y=y, d=d, nu=nu, c=c, e_store=e_store,
                                 e_up=e_up, e_com=e_com, f=f)
+
+
+#: ``schedule_slot`` over a fleet axis: state leaves carry a leading (S,)
+#: batch dimension (``R_server`` becomes (S,)), per-worker observation
+#: fields are (S, M), and the scalar sub-channel budget ``L`` plus the
+#: ``SystemParams`` physics are shared across the fleet.  This is the
+#: per-slot kernel of the batched fleet engine (``repro.sim.batched``).
+batched_schedule_slot = jax.vmap(
+    schedule_slot,
+    in_axes=(0, None,
+             Observation(D=0, r=0, E_H=0, L=None, new_cycles=0)))
 
 
 def run_horizon(state: QueueState, params: SystemParams, obs_seq: Observation

@@ -7,16 +7,19 @@ drift-plus-penalty uplink of each worker's partial-gradient bytes → decode
 once enough coded contributions have *arrived* (not merely been computed).
 """
 from .events import Event, EventEngine, COMPUTE_DONE, SLOT_TICK
-from .channel import (ChannelModel, GilbertElliottChannel, StaticChannel,
-                      TraceChannel)
-from .cluster import CommParams, CommStats, EdgeCluster
+from .channel import (ChannelModel, CommTape, GilbertElliottChannel,
+                      StaticChannel, TraceChannel)
+from .cluster import CommJob, CommParams, CommStats, EdgeCluster
 from .scenarios import available_scenarios, get_scenario, make_cluster
+from .batched import BatchedFleet, run_fleet_batched
 from .montecarlo import FleetSummary, compare_schemes, run_fleet
 
 __all__ = [
     "Event", "EventEngine", "COMPUTE_DONE", "SLOT_TICK",
-    "ChannelModel", "StaticChannel", "GilbertElliottChannel", "TraceChannel",
-    "CommParams", "CommStats", "EdgeCluster",
+    "ChannelModel", "CommTape", "StaticChannel", "GilbertElliottChannel",
+    "TraceChannel",
+    "CommJob", "CommParams", "CommStats", "EdgeCluster",
     "available_scenarios", "get_scenario", "make_cluster",
+    "BatchedFleet", "run_fleet_batched",
     "FleetSummary", "run_fleet", "compare_schemes",
 ]

@@ -1,0 +1,371 @@
+"""Batched vmap fleet engine for the co-simulator (DESIGN.md §3.5).
+
+Reformulates the communication phase of a co-simulated epoch — stage-1
+compute sampling, deadline, stage-2 planning happen host-side exactly as in
+the oracle, then per-slot P4–P7 scheduling with arrival-gated decode — as a
+``lax.scan`` over fixed slots with all state (Q/H/E/R queues, pending
+payloads, Gilbert–Elliott channel state) carried as stacked arrays and
+``vmap``-ed over seeds.  One device dispatch advances a whole fleet by a
+chunk of slots; the event-driven :class:`~repro.sim.cluster.EdgeCluster`
+is retained as the reference oracle.
+
+Exactness contract (enforced by ``tests/test_batched_sim.py`` on every
+registry scenario × scheme): for identical slot-time discretization the
+batched engine reproduces the oracle exactly — same decode slot, arrival
+sets, byte ledgers and epoch results — because both engines
+
+  * draw their randomness from the same per-seed block tapes
+    (:class:`~repro.sim.channel.CommTape`), leaving each seed's RNG stream
+    at the same position for the next epoch;
+  * share the pure per-slot physics (``schedule_slot`` and the pure
+    channel cores), with decision thresholds (Gilbert–Elliott flips)
+    pre-resolved in float64 on the host;
+  * apply the same stop rules in the same priority order per slot:
+    decodable > provably-stuck > slot cap.
+
+The scan runs slots the oracle never executes (a stopped seed's lane keeps
+computing garbage until the chunk ends); the host-side stop tracker simply
+ignores every slot past a seed's stop slot, so the extra lanes cannot leak
+into results — and a stopped seed's tape stops drawing blocks, keeping its
+RNG stream aligned with the oracle's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lyapunov import Observation, QueueState, batched_schedule_slot
+from repro.core.runtime import EpochResult
+from repro.sim.channel import TAPE_BLOCK, CommTape
+from repro.sim.cluster import (CommJob, CommStats, EdgeCluster,
+                               arrived_mask, stuck_tolerance)
+from repro.sim.scenarios import make_cluster
+
+__all__ = ["BatchedFleet", "run_fleet_batched", "CHUNK"]
+
+#: Slots advanced per device dispatch (== the tape block size, so scan
+#: chunk b consumes exactly tape block b).
+CHUNK = TAPE_BLOCK
+
+
+# --------------------------------------------------------------------- #
+# compiled scan chunk
+# --------------------------------------------------------------------- #
+@lru_cache(maxsize=64)
+def _chunk_runner(channel_step, S: int, M: int):
+    """Jitted ``lax.scan`` over one CHUNK of slots for an (S, M) fleet.
+
+    ``channel_step`` is the channel class's pure ``step_batched`` for
+    stateful channels, or ``None`` for stateless ones (their rate rows then
+    arrive precomputed through ``xs["r"]``) — so every static/trace fleet
+    of the same shape shares one compilation.
+    """
+    stateful = channel_step is not None
+
+    def run(carry, xs, consts):
+        sysp, gb, L, visible, chp = consts
+        zeros = jnp.zeros((S, M), jnp.float32)
+
+        def body(c, x):
+            state, pending, ch_state = c
+            # workers whose gradient became ready by this slot's tick join
+            # the pending pool (ties ready == k*T resolved on the host,
+            # matching the oracle's event ordering)
+            pending = pending + gb * (visible == x["k"])
+            if stateful:
+                r, ch_state = channel_step(chp, ch_state, x["ch"], x["k"])
+                r = jnp.broadcast_to(r, (S, M)).astype(jnp.float32)
+            else:
+                r = jnp.broadcast_to(x["r"], (S, M))
+            obs = Observation(D=pending, r=r, E_H=x["h"], L=L,
+                              new_cycles=zeros)
+            state, dec = batched_schedule_slot(state, sysp, obs)
+            pending = pending - jnp.minimum(pending, dec.d)
+            out = {"d": dec.d, "c": dec.c, "Q": state.Q, "E": state.E,
+                   "pend": pending, "e_up": dec.e_up, "e_com": dec.e_com}
+            return (state, pending, ch_state), out
+
+        return jax.lax.scan(body, carry, xs)
+
+    return jax.jit(run)
+
+
+# --------------------------------------------------------------------- #
+# host-side stop tracking (mirrors the oracle's per-slot checks)
+# --------------------------------------------------------------------- #
+class _StopTracker:
+    """Replays the oracle's per-slot bookkeeping over chunk outputs.
+
+    Byte ledgers accumulate in float64 exactly as the oracle does; decode
+    gates are evaluated host-side on arrival-mask changes only (the gate is
+    a pure function of the mask, so skipping unchanged slots is lossless).
+    """
+
+    def __init__(self, jobs: Sequence[CommJob],
+                 clusters: Sequence[EdgeCluster],
+                 visible: np.ndarray, grid_len: int):
+        cp = clusters[0].comm
+        S, M = visible.shape
+        self.jobs = jobs
+        self.T = cp.slot_T
+        self.cap = cp.max_slots
+        self.grid_len = grid_len
+        self.gb = np.stack([c.grad_bytes for c in clusters])       # (S, M)
+        self.visible = visible
+        ready = np.stack([j.ready_time for j in jobs])
+        fin = np.isfinite(ready)
+        # the oracle's ``outstanding == 0``: every scheduled COMPUTE_DONE
+        # has fired ⟺ slot k has reached the last finite ready time
+        self.last_visible = np.where(
+            fin.any(1), np.max(np.where(fin, visible, -1), axis=1), -1)
+        self.tiny = np.array([stuck_tolerance(c.grad_bytes)
+                              for c in clusters])                  # (S,)
+        # energy at each slot's start, for the oracle's float64 overdraft
+        self._E_prev = np.full((S, M), float(cp.E0))
+        self.stopped = np.zeros(S, bool)
+        self.ok = np.zeros(S, bool)
+        self.n_slots = np.zeros(S, np.int64)
+        self.decode_time = np.zeros(S)
+        self.admitted = np.zeros((S, M))
+        self.delivered = np.zeros((S, M))
+        self.idle = np.zeros(S, np.int64)
+        self.min_E = np.full(S, float(cp.E0))
+        self.max_od = np.zeros(S)
+        self.arrived = np.zeros((S, M), bool)
+        self.snap_Q = np.zeros((S, M))
+        self.snap_E = np.zeros((S, M))
+        self.snap_pend = np.zeros((S, M))
+        self.snap_owed = np.zeros((S, M))
+        # memoized decode-gate value per seed; the all-False mask every
+        # seed starts from always gates False (nothing arrived yet)
+        self._memo_val = [False] * S
+
+    @property
+    def done(self) -> bool:
+        return bool(self.stopped.all())
+
+    def consume(self, k0: int, outs: dict) -> None:
+        d_t = np.asarray(outs["d"], np.float64)
+        c_t = np.asarray(outs["c"], np.float64)
+        E_t = np.asarray(outs["E"], np.float64)
+        eup_t = np.asarray(outs["e_up"], np.float64)
+        ecom_t = np.asarray(outs["e_com"], np.float64)
+        Q_t = np.asarray(outs["Q"])                    # float32, like jnp
+        p_t = np.asarray(outs["pend"])
+        S = self.stopped.shape[0]
+        decod = np.fromiter(self._memo_val, bool, S)
+        for j in range(d_t.shape[0]):
+            k = k0 + j
+            if self.done or k >= self.grid_len:
+                break
+            act = ~self.stopped
+            d, c = d_t[j], c_t[j]
+            self.admitted[act] += d[act]
+            self.delivered[act] += c[act]
+            idle_now = (d.sum(1) <= 0) & (c.sum(1) <= 0)
+            self.idle[act] += idle_now[act]
+            self.min_E[act] = np.minimum(self.min_E[act], E_t[j][act].min(1))
+            # float64 spend vs slot-start energy, as the oracle computes it
+            od = (eup_t[j] + ecom_t[j] - self._E_prev).max(axis=1)
+            self.max_od[act] = np.maximum(self.max_od[act], od[act])
+            self._E_prev = E_t[j]
+            owed = self.gb * (self.visible <= k)
+            arrived = arrived_mask(owed, self.delivered)
+            # the decode gate is a pure function of the arrival mask —
+            # re-evaluate only where the mask changed (vs the memoized one)
+            changed = act & (arrived != self.arrived).any(axis=1)
+            self.arrived[act] = arrived[act]
+            for i in np.flatnonzero(changed):
+                self._memo_val[i] = bool(self.jobs[i].is_decodable(
+                    arrived[i]))
+                decod[i] = self._memo_val[i]
+            # oracle order per slot: decodable, then provably-stuck, then
+            # the slot cap (the latter two never set decode_ok)
+            p_left = p_t[j].astype(np.float64).sum(axis=1)
+            q_left = Q_t[j].sum(axis=1)
+            stuck = ((k >= self.last_visible) & (p_left <= self.tiny)
+                     & (q_left <= self.tiny))
+            stop = act & (decod | stuck | (k + 1 >= self.cap))
+            if stop.any():
+                self.stopped |= stop
+                self.ok[stop] = decod[stop]
+                self.n_slots[stop] = k + 1
+                self.decode_time[stop] = (k + 1) * self.T
+                self.snap_Q[stop] = Q_t[j][stop].astype(np.float64)
+                self.snap_E[stop] = E_t[j][stop]
+                self.snap_pend[stop] = p_t[j][stop].astype(np.float64)
+                self.snap_owed[stop] = owed[stop]
+
+    def finalize(self) -> List[CommStats]:
+        assert self.done, "comm scan ended with unstopped seeds"
+        return [CommStats(
+            n_slots=int(self.n_slots[i]),
+            decode_time=float(self.decode_time[i]),
+            decode_ok=bool(self.ok[i]),
+            arrived=self.arrived[i].copy(),
+            bytes_offered=self.snap_owed[i].copy(),
+            bytes_admitted=self.admitted[i].copy(),
+            bytes_transmitted=self.delivered[i].copy(),
+            queue_residual=self.snap_Q[i].copy(),
+            pending_residual=self.snap_pend[i].copy(),
+            min_energy=float(self.min_E[i]),
+            max_overdraft=float(self.max_od[i]),
+            final_energy=self.snap_E[i].copy(),
+            idle_slots=int(self.idle[i]),
+        ) for i in range(len(self.jobs))]
+
+
+# --------------------------------------------------------------------- #
+# batched comm phase
+# --------------------------------------------------------------------- #
+def _batched_comm(clusters: Sequence[EdgeCluster],
+                  jobs: Sequence[CommJob]) -> List[CommStats]:
+    c0 = clusters[0]
+    S, M, cp = len(clusters), c0.M, c0.comm
+    T = cp.slot_T
+    grid_len = max(cp.max_slots, 1)          # the oracle always runs slot 0
+    chan = c0.channel
+    stateful = chan.stateful
+
+    ready = np.stack([j.ready_time for j in jobs])             # (S, M) f64
+    # slot at which each worker's payload becomes visible to the scheduler:
+    # first k with k*T >= ready (ties fire before the tick, matching the
+    # oracle's heap ordering); grid_len ⟹ never within this epoch
+    grid = np.arange(grid_len, dtype=np.float64) * T
+    visible = np.searchsorted(grid, ready, side="left")
+
+    tapes = [CommTape(c.channel, c.engine.rng, cp.harvest_mean,
+                      cp.harvest_jitter) for c in clusters]
+
+    runner = _chunk_runner(type(chan).step_batched if stateful else None,
+                           S, M)
+    consts = (c0.sys_params,
+              jnp.asarray(c0.grad_bytes, jnp.float32),
+              c0._L,
+              jnp.asarray(visible, jnp.int32),
+              chan.batched_params())
+
+    z = jnp.zeros((S, M), jnp.float32)
+    state = QueueState(Q=z, H=z, E=jnp.full((S, M), cp.E0, jnp.float32),
+                       R=z, R_server=jnp.zeros((S,), jnp.float32))
+    if stateful:
+        ch_state = jnp.asarray(np.stack(
+            [c.channel.init_state_np(t.u_init)
+             for c, t in zip(clusters, tapes)]))
+    else:
+        ch_state = ()
+    carry = (state, z, ch_state)
+
+    tracker = _StopTracker(jobs, clusters, visible, grid_len)
+    zero_block = np.zeros((CHUNK, M))
+    n_blocks = -(-grid_len // CHUNK)
+    for b in range(n_blocks):
+        if tracker.done:
+            break
+        k0 = b * CHUNK
+        # only still-running seeds draw tape block b — a stopped seed's
+        # oracle run never drew it either, keeping the streams aligned
+        for i, t in enumerate(tapes):
+            if not tracker.stopped[i]:
+                t.ensure(k0 + CHUNK - 1)
+
+        def block_or_zero(t, kind):
+            if t.n_drawn <= k0:
+                return zero_block
+            blk = (t.harvest_block(b) if kind == "h"
+                   else t.channel_block(b))
+            return blk if blk is not None else zero_block
+
+        xs = {"k": jnp.arange(k0, k0 + CHUNK, dtype=jnp.int32),
+              "h": jnp.asarray(np.stack(
+                  [block_or_zero(t, "h") for t in tapes], axis=1),
+                  jnp.float32)}
+        if stateful:
+            per_seed = [c.channel.tape_arrays(block_or_zero(t, "ch"))
+                        for c, t in zip(clusters, tapes)]
+            xs["ch"] = {key: jnp.asarray(np.stack(
+                [d[key] for d in per_seed], axis=1))
+                for key in per_seed[0]}
+        else:
+            xs["r"] = jnp.asarray(
+                chan.rates_for_slots(np.arange(k0, k0 + CHUNK)),
+                jnp.float32)
+        carry, outs = runner(carry, xs, consts)
+        tracker.consume(k0, jax.tree.map(np.asarray, outs))
+    return tracker.finalize()
+
+
+# --------------------------------------------------------------------- #
+# fleet driver
+# --------------------------------------------------------------------- #
+class BatchedFleet:
+    """A fleet of same-physics clusters advanced one batched epoch at a
+    time: per-seed compute phases on the host (planner/predictor state is
+    inherently sequential), then one vmap-ed slot scan for the whole
+    fleet's communication phase, then per-seed decode + assembly.
+
+    Seeds must share the scenario physics (M, scheme, CommParams, channel
+    model); the per-seed randomness — completion times, fading, harvest —
+    is what varies across the batch axis.  Scenario/scheme grids map onto
+    host-level loops over fleets (see ``montecarlo.compare_schemes``).
+    """
+
+    def __init__(self, scenario: Optional[str] = None,
+                 scheme: str = "two-stage", seeds: Sequence[int] = (0,),
+                 *, clusters: Optional[Sequence[EdgeCluster]] = None,
+                 **overrides):
+        if clusters is None:
+            if scenario is None:
+                raise ValueError("need a scenario name or explicit clusters")
+            clusters = [make_cluster(scenario, scheme=scheme, seed=int(s),
+                                     **overrides) for s in seeds]
+        clusters = list(clusters)
+        if not clusters:
+            raise ValueError("need at least one cluster")
+        c0 = clusters[0]
+
+        def comm_key(cluster):
+            # grad_bytes may be an ndarray (dataclass __eq__ would raise);
+            # it is compared separately via the broadcast per-worker array
+            f = dataclasses.asdict(cluster.comm)
+            f.pop("grad_bytes")
+            return f
+
+        for c in clusters[1:]:
+            if (c.M != c0.M or c.scheme != c0.scheme
+                    or comm_key(c) != comm_key(c0)
+                    or type(c.channel) is not type(c0.channel)
+                    or c.channel.physics_key() != c0.channel.physics_key()
+                    or not np.array_equal(c.grad_bytes, c0.grad_bytes)):
+                raise ValueError(
+                    "BatchedFleet requires homogeneous physics across "
+                    "seeds (same M, scheme, CommParams, channel model and "
+                    "grad_bytes); sweep heterogeneous grids as separate "
+                    "fleets")
+        self.clusters = clusters
+
+    @property
+    def n_seeds(self) -> int:
+        return len(self.clusters)
+
+    def run_epoch(self, epoch: int) -> List[EpochResult]:
+        """One batched epoch → per-seed :class:`EpochResult` list."""
+        jobs = [c.comm_job(epoch) for c in self.clusters]
+        stats = _batched_comm(self.clusters, jobs)
+        return [job.assemble(st) for job, st in zip(jobs, stats)]
+
+    def run(self, n_epochs: int) -> List[List[EpochResult]]:
+        """``n_epochs`` batched epochs → results indexed [epoch][seed]."""
+        return [self.run_epoch(e) for e in range(n_epochs)]
+
+
+def run_fleet_batched(scenario: str, scheme: str = "two-stage", *,
+                      seeds: Sequence[int] = (0,), n_epochs: int = 3,
+                      **overrides) -> List[List[EpochResult]]:
+    """Convenience wrapper: build a fleet and run it, [epoch][seed]."""
+    return BatchedFleet(scenario, scheme, seeds, **overrides).run(n_epochs)

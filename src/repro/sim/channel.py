@@ -2,29 +2,118 @@
 
 Replaces the bare ``rates`` array the Lyapunov benchmarks fed into
 ``Observation.r``: a channel model produces the (M,) vector of per-worker
-uplink capacities (bytes per unit time) for each slot, optionally evolving
-internal state.  All randomness draws from the RNG handed in per slot (the
-event engine's stream), so one seed reproduces the whole epoch.
+uplink capacities (bytes per unit time) for each slot.
+
+The module is layered so the event-driven oracle (``sim/cluster.py``) and
+the batched vmap fleet engine (``sim/batched.py``) share one source of
+truth (DESIGN.md §3.5):
+
+  pure core
+      ``init_state_np`` / ``step_np`` — side-effect-free per-slot stepping
+      for the oracle's host loop, and ``rates_for_slots`` /
+      ``tape_arrays`` + ``step_batched`` — the batched-array form usable
+      inside ``lax.scan``.  Stateless models (static, trace) precompute a
+      whole rate block; the Gilbert–Elliott Markov chain is carried as
+      scan state and consumes pre-drawn uniforms.
+
+  randomness tape
+      :class:`CommTape` draws the channel init + per-slot channel and
+      harvest uniforms in fixed blocks of :data:`TAPE_BLOCK` slots, so RNG
+      consumption depends only on the furthest slot block reached — not on
+      which engine ran the epoch.  Two engines that stop at the same slot
+      consume bitwise-identical randomness and leave the seed's stream at
+      the same position for the next epoch.
+
+  legacy object API
+      ``reset(rng)`` / ``slot_rates(slot, rng)`` remain as thin stateful
+      wrappers over the pure core for interactive use and older tests.
 """
 from __future__ import annotations
 
+from typing import Optional
+
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["ChannelModel", "StaticChannel", "GilbertElliottChannel",
-           "TraceChannel"]
+           "TraceChannel", "CommTape", "TAPE_BLOCK"]
+
+#: Slots per randomness block (== the batched engine's scan chunk).
+TAPE_BLOCK = 256
 
 
 class ChannelModel:
-    """Base: per-slot uplink rates for M workers."""
+    """Base: per-slot uplink rates for M workers.
+
+    Subclasses implement the pure core; the stateful ``reset``/
+    ``slot_rates`` wrappers below are derived from it.
+    """
 
     M: int
+    #: True when per-slot rates depend on evolving *random* state (the
+    #: batched engine then carries the state through its scan).
+    stateful = False
 
+    def physics_key(self) -> tuple:
+        """Hashable description of the channel physics — two channels with
+        equal keys produce identical rate processes from identical draws
+        (used by ``BatchedFleet`` to validate fleet homogeneity)."""
+        raise NotImplementedError
+
+    # -- randomness contract ------------------------------------------- #
+    def draw_init(self, rng: np.random.Generator) -> Optional[np.ndarray]:
+        """Uniforms needed to initialise state at epoch start (or None)."""
+        return None
+
+    def draw_slots(self, rng: np.random.Generator,
+                   n: int) -> Optional[np.ndarray]:
+        """(n, M) uniforms consumed by ``n`` slots of stepping (or None)."""
+        return None
+
+    # -- pure host-side core (oracle path) ------------------------------ #
+    def init_state_np(self, u_init: Optional[np.ndarray]):
+        """State at slot 0 from the init draw (None for stateless models)."""
+        return None
+
+    def step_np(self, state, u_row: Optional[np.ndarray], slot: int):
+        """Pure step: ``(rates_f64, next_state)`` for slot ``slot``."""
+        raise NotImplementedError
+
+    # -- pure batched core (lax.scan path) ------------------------------ #
+    def rates_for_slots(self, slots: np.ndarray) -> np.ndarray:
+        """(len(slots), M) rate rows — stateless models only."""
+        raise NotImplementedError(f"{type(self).__name__} is stateful; "
+                                  "carry its state through the scan instead")
+
+    def batched_params(self) -> dict:
+        """jnp parameter pytree handed to ``step_batched``."""
+        return {}
+
+    def tape_arrays(self, u_block: np.ndarray) -> dict:
+        """Preprocess a (n, M) uniform block into the per-slot xs pytree.
+
+        Thresholding against transition probabilities happens here in
+        float64 so the in-scan step is exact regardless of jax's x64 mode.
+        """
+        return {}
+
+    @staticmethod
+    def step_batched(params: dict, state, x_row: dict, slot):
+        """Pure jnp step: ``(rates_f32, next_state)`` — stateful models."""
+        raise NotImplementedError
+
+    # -- legacy stateful API (thin wrappers over the pure core) --------- #
     def reset(self, rng: np.random.Generator) -> None:
         """Re-initialize internal state at the start of an epoch."""
+        self._state = self.init_state_np(self.draw_init(rng))
 
     def slot_rates(self, slot: int, rng: np.random.Generator) -> np.ndarray:
         """(M,) uplink capacities for slot ``slot`` (and advance state)."""
-        raise NotImplementedError
+        u = self.draw_slots(rng, 1)
+        row = u[0] if u is not None else None
+        r, self._state = self.step_np(getattr(self, "_state", None), row,
+                                      slot)
+        return r
 
 
 class StaticChannel(ChannelModel):
@@ -34,8 +123,14 @@ class StaticChannel(ChannelModel):
         self._rates = np.asarray(rates, np.float64)
         self.M = len(self._rates)
 
-    def slot_rates(self, slot: int, rng: np.random.Generator) -> np.ndarray:
-        return self._rates.copy()
+    def physics_key(self) -> tuple:
+        return ("static", self._rates.tobytes())
+
+    def step_np(self, state, u_row, slot):
+        return self._rates.copy(), state
+
+    def rates_for_slots(self, slots: np.ndarray) -> np.ndarray:
+        return np.broadcast_to(self._rates, (len(slots), self.M)).copy()
 
 
 class GilbertElliottChannel(ChannelModel):
@@ -44,6 +139,8 @@ class GilbertElliottChannel(ChannelModel):
     ``p_gb`` (good→bad) and ``p_bg`` (bad→good) — the classic bursty-loss
     model, per worker independently.
     """
+
+    stateful = True
 
     def __init__(self, rate_good: np.ndarray, rate_bad: np.ndarray,
                  p_gb: float = 0.1, p_bg: float = 0.3,
@@ -55,21 +152,47 @@ class GilbertElliottChannel(ChannelModel):
         self.p_gb = float(p_gb)
         self.p_bg = float(p_bg)
         self._start_good = start_good
-        self._good = np.full(self.M, start_good, bool)
+        self._state = np.full(self.M, start_good, bool)
 
-    def reset(self, rng: np.random.Generator) -> None:
-        if self._start_good:
-            self._good = np.ones(self.M, bool)
-        else:  # draw from the stationary distribution
-            p_good = self.p_bg / max(self.p_gb + self.p_bg, 1e-12)
-            self._good = rng.random(self.M) < p_good
+    def physics_key(self) -> tuple:
+        return ("gilbert-elliott", self.rate_good.tobytes(),
+                self.rate_bad.tobytes(), self.p_gb, self.p_bg,
+                self._start_good)
 
-    def slot_rates(self, slot: int, rng: np.random.Generator) -> np.ndarray:
-        r = np.where(self._good, self.rate_good, self.rate_bad)
-        flip = rng.random(self.M)
-        self._good = np.where(self._good, flip >= self.p_gb,
-                              flip < self.p_bg)
-        return r
+    def draw_init(self, rng: np.random.Generator) -> Optional[np.ndarray]:
+        # start_good needs no draw; otherwise one uniform per worker for
+        # the stationary-distribution initialisation.
+        return None if self._start_good else rng.random(self.M)
+
+    def draw_slots(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        return rng.random((n, self.M))
+
+    def init_state_np(self, u_init: Optional[np.ndarray]) -> np.ndarray:
+        if u_init is None:
+            return np.ones(self.M, bool)
+        p_good = self.p_bg / max(self.p_gb + self.p_bg, 1e-12)
+        return u_init < p_good
+
+    def step_np(self, good, u_row, slot):
+        r = np.where(good, self.rate_good, self.rate_bad)
+        new_good = np.where(good, u_row >= self.p_gb, u_row < self.p_bg)
+        return r, new_good
+
+    def batched_params(self) -> dict:
+        return {"rate_good": jnp.asarray(self.rate_good, jnp.float32),
+                "rate_bad": jnp.asarray(self.rate_bad, jnp.float32)}
+
+    def tape_arrays(self, u_block: np.ndarray) -> dict:
+        # float64 comparisons on the host: the scan then only selects
+        # booleans, so the chain is bit-identical to the oracle's.
+        return {"stay_good": u_block >= self.p_gb,
+                "go_good": u_block < self.p_bg}
+
+    @staticmethod
+    def step_batched(params, good, x_row, slot):
+        r = jnp.where(good, params["rate_good"], params["rate_bad"])
+        new_good = jnp.where(good, x_row["stay_good"], x_row["go_good"])
+        return r, new_good
 
 
 class TraceChannel(ChannelModel):
@@ -83,7 +206,71 @@ class TraceChannel(ChannelModel):
         self.M = self.trace.shape[1]
         self.loop = loop
 
-    def slot_rates(self, slot: int, rng: np.random.Generator) -> np.ndarray:
+    def physics_key(self) -> tuple:
+        return ("trace", self.trace.tobytes(), self.loop)
+
+    def _index(self, slots):
         T = self.trace.shape[0]
-        idx = slot % T if self.loop else min(slot, T - 1)
-        return self.trace[idx].copy()
+        slots = np.asarray(slots)
+        return slots % T if self.loop else np.minimum(slots, T - 1)
+
+    def step_np(self, state, u_row, slot):
+        return self.trace[int(self._index(slot))].copy(), state
+
+    def rates_for_slots(self, slots: np.ndarray) -> np.ndarray:
+        return self.trace[self._index(slots)].copy()
+
+
+class CommTape:
+    """Block-drawn randomness for one epoch's communication phase.
+
+    Draw order per epoch (all from the one per-seed RNG stream): the
+    channel's init uniforms, then for each block b the channel's
+    ``(block, M)`` slot uniforms followed by the harvest ``(block, M)``
+    uniforms.  Block b is drawn the first time any slot in
+    ``[b·block, (b+1)·block)`` is requested via :meth:`ensure`, so both
+    co-sim engines — which stop at the same slot under the exactness
+    contract — consume identical randomness and leave the stream at the
+    same position for the next epoch's compute phase.
+    """
+
+    def __init__(self, channel: ChannelModel, rng: np.random.Generator,
+                 harvest_mean: float, harvest_jitter: float,
+                 block: int = TAPE_BLOCK):
+        self.channel = channel
+        self.rng = rng
+        self.block = int(block)
+        self._hm = float(harvest_mean)
+        jit = float(harvest_jitter)
+        self._lo, self._hi = max(1.0 - jit, 0.0), 1.0 + jit
+        self.u_init = channel.draw_init(rng)
+        self._u: list = []
+        self._h: list = []
+        self.n_drawn = 0
+        self.ensure(0)
+
+    def ensure(self, slot: int) -> None:
+        """Draw blocks until ``slot`` is on the tape."""
+        while slot >= self.n_drawn:
+            u = self.channel.draw_slots(self.rng, self.block)
+            if u is not None:
+                self._u.append(u)
+            self._h.append(self._hm * self.rng.uniform(
+                self._lo, self._hi, (self.block, self.channel.M)))
+            self.n_drawn += self.block
+
+    # row access (oracle) ---------------------------------------------- #
+    def channel_u(self, k: int) -> Optional[np.ndarray]:
+        if not self._u:
+            return None
+        return self._u[k // self.block][k % self.block]
+
+    def harvest(self, k: int) -> np.ndarray:
+        return self._h[k // self.block][k % self.block]
+
+    # block access (batched engine) ------------------------------------ #
+    def channel_block(self, b: int) -> Optional[np.ndarray]:
+        return self._u[b] if self._u else None
+
+    def harvest_block(self, b: int) -> np.ndarray:
+        return self._h[b]

@@ -23,7 +23,10 @@ Couples the two phases the paper analyses separately:
 
 The heap-based :class:`~repro.sim.events.EventEngine` merges continuous
 compute-completion events into the slotted comm timeline and owns the one
-RNG stream behind completion sampling, fading and harvest.
+RNG stream behind completion sampling, fading and harvest.  All comm-phase
+randomness is drawn through a :class:`~repro.sim.channel.CommTape` in fixed
+blocks, so the batched fleet engine (``repro.sim.batched``) can replay an
+epoch bit-for-bit from the same seed (DESIGN.md §3.5).
 """
 from __future__ import annotations
 
@@ -40,14 +43,36 @@ from repro.core.lyapunov import (Observation, SystemParams, init_queues,
                                  schedule_slot)
 from repro.core.runtime import (EpochResult, build_epoch_backend,
                                 single_stage_accounting)
-from repro.sim.channel import ChannelModel, StaticChannel
+from repro.sim.channel import ChannelModel, CommTape, StaticChannel
 from repro.sim.events import COMPUTE_DONE, SLOT_TICK, EventEngine
 
-__all__ = ["CommParams", "CommStats", "EdgeCluster"]
+__all__ = ["CommJob", "CommParams", "CommStats", "EdgeCluster",
+           "arrived_mask", "stuck_tolerance"]
 
 SCHEMES = ("two-stage", "cyclic", "fractional", "uncoded")
 
 _SLOT_STEP = jax.jit(schedule_slot)
+
+#: Arrival tolerance: a worker's payload counts as arrived once
+#: ``delivered >= owed·(1 − ARRIVAL_RTOL) − ARRIVAL_ATOL``.
+ARRIVAL_RTOL = 1e-6
+ARRIVAL_ATOL = 1e-12
+#: Residual bytes below ``STUCK_FRAC · max(grad_bytes)`` count as drained
+#: when deciding that an epoch is provably stuck.
+STUCK_FRAC = 1e-6
+
+
+def arrived_mask(owed: np.ndarray, delivered: np.ndarray) -> np.ndarray:
+    """Workers whose full payload reached the server — shared by the
+    event-driven oracle and the batched engine so the arrival threshold
+    cannot drift between them."""
+    return (owed > 0) & (delivered >= owed - ARRIVAL_RTOL * owed
+                         - ARRIVAL_ATOL)
+
+
+def stuck_tolerance(grad_bytes: np.ndarray) -> float:
+    """Residual-byte tolerance for the provably-stuck stop rule."""
+    return STUCK_FRAC * float(np.max(grad_bytes))
 
 
 @dataclasses.dataclass
@@ -67,6 +92,21 @@ class CommParams:
     f_max: float = 100.0           # worker cycles per slot (unused backlog)
     delta: float = 1e-3            # energy per worker cycle
     max_slots: int = 5000          # hard cap on comm slots per epoch
+
+
+@dataclasses.dataclass
+class CommJob:
+    """Comm-phase inputs + result assembly for one epoch, engine-agnostic.
+
+    Produced by :meth:`EdgeCluster.comm_job` after the compute phase has
+    been sampled; consumed either by the event-driven loop
+    (:meth:`EdgeCluster._run_comm`) or by the batched scan
+    (``repro.sim.batched``), both of which hand the resulting
+    :class:`CommStats` back to ``assemble``.
+    """
+    ready_time: np.ndarray                       # (M,) gradient-ready times
+    is_decodable: Callable[[np.ndarray], bool]   # arrival mask -> gate
+    assemble: Callable[["CommStats"], EpochResult]
 
 
 @dataclasses.dataclass
@@ -153,8 +193,13 @@ class EdgeCluster:
         return _SLOT_STEP(state, self.sys_params, obs)
 
     # ------------------------------------------------------------------ #
-    def run_epoch(self, epoch: int) -> EpochResult:
-        """One co-simulated epoch: compute → scheduled uplink → decode."""
+    def comm_job(self, epoch: int) -> CommJob:
+        """Sample the compute phase and package the comm-phase inputs.
+
+        Consumes this epoch's compute-phase randomness; the returned job
+        must then be driven through exactly one comm phase (event-driven
+        or batched) so the per-seed RNG stream stays aligned.
+        """
         if self.scheme == "two-stage":
             ph = self.runtime.compute_phase(epoch)
             must, w2, need2 = self.runtime.decode_requirements(ph)
@@ -173,12 +218,15 @@ class EdgeCluster:
                         return False
                 return True
 
-            stats = self._run_comm(ph.ready_time, decodable)
-            # decodability is monotone in arrivals and gated per slot, so a
-            # forced stop implies result_from_phase's own decode fails (or a
-            # finisher is missing) — decode_ok needs no override here.
-            return self.runtime.result_from_phase(
-                ph, stats.arrived, stats.decode_time, comm=stats)
+            def assemble(stats: CommStats) -> EpochResult:
+                # decodability is monotone in arrivals and gated per slot,
+                # so a forced stop implies result_from_phase's own decode
+                # fails (or a finisher is missing) — decode_ok needs no
+                # override here.
+                return self.runtime.result_from_phase(
+                    ph, stats.arrived, stats.decode_time, comm=stats)
+
+            return CommJob(ph.ready_time, decodable, assemble)
 
         # --- static single-stage baselines ----------------------------- #
         scheme = self.static_scheme
@@ -197,8 +245,17 @@ class EdgeCluster:
             except ValueError:
                 return False
 
-        stats = self._run_comm(t, decodable)
-        return self._static_result(scheme, t, tasks, stats)
+        def assemble(stats: CommStats) -> EpochResult:
+            return self._static_result(scheme, t, tasks, stats)
+
+        return CommJob(t, decodable, assemble)
+
+    # ------------------------------------------------------------------ #
+    def run_epoch(self, epoch: int) -> EpochResult:
+        """One co-simulated epoch: compute → scheduled uplink → decode."""
+        job = self.comm_job(epoch)
+        stats = self._run_comm(job.ready_time, job.is_decodable)
+        return job.assemble(stats)
 
     # ------------------------------------------------------------------ #
     def _static_result(self, scheme: CodingScheme, t: np.ndarray,
@@ -240,7 +297,12 @@ class EdgeCluster:
         T = cp.slot_T
         eng.clear()
         eng.reset_clock()
-        self.channel.reset(eng.rng)
+        # All comm randomness flows through the tape (channel init, channel
+        # per-slot uniforms, harvest) so the batched engine can replay the
+        # identical stream; the channel object itself stays untouched.
+        tape = CommTape(self.channel, eng.rng, cp.harvest_mean,
+                        cp.harvest_jitter)
+        ch_state = self.channel.init_state_np(tape.u_init)
 
         outstanding = 0
         for m in np.flatnonzero(np.isfinite(ready_time)):
@@ -248,7 +310,9 @@ class EdgeCluster:
             outstanding += 1
 
         state = init_queues(M, E0=cp.E0)
-        pending = np.zeros(M)      # ready at worker, not yet admitted
+        # pending mirrors the batched scan's float32 carry exactly — the
+        # scheduler's D input must be bit-identical between the engines
+        pending = np.zeros(M, np.float32)  # ready at worker, not admitted
         owed = np.zeros(M)         # total payload each worker must deliver
         admitted = np.zeros(M)
         delivered = np.zeros(M)
@@ -271,10 +335,10 @@ class EdgeCluster:
                 continue
 
             k = ev.payload                       # SLOT_TICK: decide slot k
-            r = self.channel.slot_rates(k, eng.rng)
-            jit = cp.harvest_jitter
-            e_h = cp.harvest_mean * eng.rng.uniform(
-                max(1.0 - jit, 0.0), 1.0 + jit, M)
+            tape.ensure(k)
+            r, ch_state = self.channel.step_np(ch_state, tape.channel_u(k),
+                                               k)
+            e_h = tape.harvest(k)
             obs = Observation(
                 D=jnp.asarray(pending, jnp.float32),
                 r=jnp.asarray(r, jnp.float32),
@@ -288,7 +352,7 @@ class EdgeCluster:
                 + np.asarray(dec.e_com, np.float64)
             max_overdraft = max(max_overdraft,
                                 float(np.max(spend - E_before)))
-            pending -= np.minimum(pending, d)
+            pending -= np.minimum(pending, np.asarray(dec.d, np.float32))
             admitted += d
             delivered += c
             min_E = min(min_E, float(np.min(np.asarray(state.E))))
@@ -296,14 +360,15 @@ class EdgeCluster:
             if float(d.sum()) <= 0 and float(c.sum()) <= 0:
                 idle_slots += 1
 
-            arrived = (owed > 0) & (delivered >= owed - 1e-6 * owed - 1e-12)
+            arrived = arrived_mask(owed, delivered)
             if is_decodable(arrived):
                 decode_ok = True
                 decode_time = (k + 1) * T
                 break
             q_left = float(np.asarray(state.Q).sum())
-            tiny = 1e-6 * float(self.grad_bytes.max())
-            if (outstanding == 0 and pending.sum() <= tiny
+            tiny = stuck_tolerance(self.grad_bytes)
+            if (outstanding == 0
+                    and float(pending.astype(np.float64).sum()) <= tiny
                     and q_left <= tiny):
                 # everything that will ever arrive has arrived — decode is
                 # impossible for this epoch (too many faults): force stop
@@ -320,7 +385,7 @@ class EdgeCluster:
             arrived=arrived, bytes_offered=owed.copy(),
             bytes_admitted=admitted, bytes_transmitted=delivered,
             queue_residual=np.asarray(state.Q, np.float64).copy(),
-            pending_residual=pending.copy(), min_energy=min_E,
+            pending_residual=pending.astype(np.float64), min_energy=min_E,
             max_overdraft=max_overdraft,
             final_energy=np.asarray(state.E, np.float64).copy(),
             idle_slots=idle_slots)

@@ -143,6 +143,19 @@ def _energy(scheme="two-stage", seed=0, **over):
 
 
 @register_scenario(
+    "saturated-uplink",
+    "Gradient payloads an order of magnitude above per-slot link capacity: "
+    "the epoch is dominated by a long, P7-contended drain of the backlog "
+    "queues — the comm-bound regime where fleet-scale sweeps live or die.")
+def _saturated(scheme="two-stage", seed=0, **over):
+    return _cluster(scheme, seed, dict(
+        rates=np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0]),
+        channel=StaticChannel(np.array([1.5, 1.5, 3.0, 3.0, 6.0, 6.0])),
+        comm=CommParams(grad_bytes=16.0, slot_T=0.1, n_subchannels=2.0),
+        noise_scale=0.2), over)
+
+
+@register_scenario(
     "flash-crowd",
     "Trace-driven congestion: uplink capacity collapses to 10% for a burst "
     "of slots mid-epoch, then recovers (cross-traffic flash crowd).")

@@ -2,9 +2,10 @@
 import numpy as np
 import pytest
 
-from repro.sim import (COMPUTE_DONE, EventEngine, GilbertElliottChannel,
-                       StaticChannel, TraceChannel, available_scenarios,
-                       compare_schemes, make_cluster, run_fleet)
+from repro.sim import (COMPUTE_DONE, BatchedFleet, EventEngine,
+                       FleetSummary, GilbertElliottChannel, StaticChannel,
+                       TraceChannel, available_scenarios, compare_schemes,
+                       make_cluster, run_fleet)
 from repro.sim.cluster import SCHEMES
 
 
@@ -271,3 +272,75 @@ def test_run_fleet_summary_statistics():
 def test_compare_schemes_covers_all_four():
     out = compare_schemes("homogeneous", n_seeds=1, n_epochs=1)
     assert set(out) == set(SCHEMES)
+
+
+def test_run_fleet_engines_agree():
+    """Batched and oracle engines run identical seeds through identical
+    randomness tapes, so the whole summary must agree field by field."""
+    kw = dict(n_seeds=2, n_epochs=2, base_seed=3)
+    a = run_fleet("fading-uplink", "two-stage", engine="oracle", **kw)
+    b = run_fleet("fading-uplink", "two-stage", engine="batched", **kw)
+    for f in ("mean_time", "std_time", "p50_time", "p95_time",
+              "mean_compute_time", "mean_comm_time", "comm_fraction",
+              "mean_utilization", "mean_slots", "decode_failure_rate",
+              "mean_stragglers"):
+        assert getattr(a, f) == pytest.approx(getattr(b, f), rel=1e-9), f
+
+
+def test_run_fleet_rejects_bad_engine_and_sizes():
+    with pytest.raises(ValueError, match="engine"):
+        run_fleet("homogeneous", engine="warp-drive")
+    with pytest.raises(ValueError, match="n_seeds"):
+        run_fleet("homogeneous", n_seeds=0)
+
+
+def test_fleet_summary_row_formatting():
+    s = FleetSummary(
+        scenario="flash-crowd", scheme="two-stage", n_seeds=2, n_epochs=3,
+        mean_time=1.234, std_time=0.1, p50_time=1.2, p95_time=1.9,
+        mean_compute_time=0.9, mean_comm_time=0.334, comm_fraction=0.27,
+        mean_utilization=0.5, mean_slots=12.0, decode_failure_rate=0.125,
+        mean_stragglers=1.0)
+    row = s.row()
+    assert "flash-crowd" in row and "two-stage" in row
+    assert "time= 1.234±0.100" in row
+    assert "comp= 0.900" in row and "comm= 0.334" in row
+    assert "27.0%" in row and "p95= 1.900" in row
+    assert "slots= 12.0" in row and "fail=0.12" in row
+
+
+def test_small_fleet_p95_is_an_observed_epoch_time():
+    """With n_seeds*n_epochs < 20 samples the 95th percentile must be an
+    actually-observed epoch time (nearest-above order statistic), not a
+    value interpolated between the top two — so p50 <= p95 <= max."""
+    seeds = [0, 1000]
+    s = run_fleet("homogeneous", "two-stage", n_seeds=2, n_epochs=2)
+    times = [res.time
+             for row in BatchedFleet("homogeneous", "two-stage", seeds).run(2)
+             for res in row]
+    assert any(s.p95_time == pytest.approx(t, rel=1e-12) for t in times)
+    assert s.p50_time <= s.p95_time <= max(times) + 1e-12
+
+
+def test_large_fleet_p95_uses_linear_interpolation():
+    s = run_fleet("homogeneous", "two-stage", n_seeds=8, n_epochs=3)
+    assert s.n_seeds * s.n_epochs >= 20
+    assert s.p50_time <= s.p95_time
+    assert s.decode_failure_rate == 0.0
+    # >= 20 samples: percentiles are numpy's default linear interpolation
+    times = [res.time
+             for row in BatchedFleet("homogeneous", "two-stage",
+                                     [1000 * i for i in range(8)]).run(3)
+             for res in row]
+    assert s.p95_time == pytest.approx(np.percentile(times, 95), rel=1e-12)
+    assert s.p50_time == pytest.approx(np.percentile(times, 50), rel=1e-12)
+
+
+def test_compare_schemes_forwards_engine_and_shares_seed_list():
+    out = compare_schemes("homogeneous", n_seeds=2, n_epochs=1,
+                          engine="oracle")
+    assert set(out) == set(SCHEMES)
+    for scheme, summary in out.items():
+        assert summary.scheme == scheme
+        assert summary.scenario == "homogeneous"
+        assert summary.n_seeds == 2 and summary.n_epochs == 1
