@@ -29,14 +29,14 @@ SMOKE = dict(scenarios=["saturated-uplink"], n_seeds=8, n_epochs=1)
 
 def _time_engine(scenario: str, scheme: str, engine: str, n_seeds: int,
                  n_epochs: int) -> float:
-    from repro.sim import run_fleet
+    from repro.sim import run_fleet, scenario_spec
+    spec = scenario_spec(scenario)
     # warm the jit caches: the batched engine compiles at the (S, M) fleet
     # shape, the oracle's only kernel is per-cluster (fleet-size-free)
     warm_seeds = n_seeds if engine == "batched" else 1
-    run_fleet(scenario, scheme, n_seeds=warm_seeds, n_epochs=1,
-              engine=engine)
+    run_fleet(spec, scheme, n_seeds=warm_seeds, n_epochs=1, engine=engine)
     t0 = time.perf_counter()
-    run_fleet(scenario, scheme, n_seeds=n_seeds, n_epochs=n_epochs,
+    run_fleet(spec, scheme, n_seeds=n_seeds, n_epochs=n_epochs,
               engine=engine)
     return time.perf_counter() - t0
 

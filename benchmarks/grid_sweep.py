@@ -1,0 +1,139 @@
+"""Grid-sweep throughput: compile-sharing grouped sweep vs per-cell fleets.
+
+Builds a scenario × scheme grid of ``ExperimentSpec`` cells and measures
+cells/sec two ways: ``sweep()`` (physics-compatible cells stacked onto one
+``BatchedFleet`` per group, one scan compile per group) versus a host loop
+of per-cell ``run_fleet(engine="batched")`` calls (one fleet — and one
+fleet-shaped dispatch stream — per cell).  Both paths run identical seeds
+through identical randomness tapes and produce bit-identical
+``FleetSummary`` rows (enforced by ``tests/test_sweep.py``), so the
+comparison is work-for-work.
+
+    PYTHONPATH=src python -m benchmarks.grid_sweep                # full
+    PYTHONPATH=src python -m benchmarks.grid_sweep --smoke        # CI job
+    PYTHONPATH=src python -m benchmarks.grid_sweep --out BENCH_grid.json
+
+Writes a JSON artifact (default ``BENCH_grid.json``) uploaded by CI
+alongside ``BENCH_fleet.json`` so the perf trajectory accumulates across
+commits.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+FULL = dict(scenarios=["homogeneous", "bursty-stragglers",
+                       "heterogeneous-rates", "saturated-uplink"],
+            n_seeds=16, n_epochs=2)
+SMOKE = dict(scenarios=["homogeneous", "bursty-stragglers"],
+             n_seeds=8, n_epochs=1)
+
+
+def _grid(scenarios, n_seeds, n_epochs):
+    from repro.sim import ExperimentSpec, scenario_spec
+    from repro.sim.cluster import SCHEMES
+    return [ExperimentSpec(scenario=scenario_spec(name), scheme=scheme,
+                           n_seeds=n_seeds, n_epochs=n_epochs)
+            for name in scenarios for scheme in SCHEMES]
+
+
+def run_suite(scenarios, n_seeds: int, n_epochs: int) -> dict:
+    from repro.sim import (plan_groups, reset_scan_compile_cache,
+                           run_experiment, scan_trace_count, sweep)
+    grid = _grid(scenarios, n_seeds, n_epochs)
+    n_cells = len(grid)
+    groups = plan_groups(grid)
+
+    # warm both paths once so compile time is reported separately from
+    # steady-state throughput
+    reset_scan_compile_cache()
+    traces_before = scan_trace_count()
+    t0 = time.perf_counter()
+    sweep(grid)
+    warm_grouped = time.perf_counter() - t0
+    grouped_traces = scan_trace_count() - traces_before
+
+    t0 = time.perf_counter()
+    rows = sweep(grid)
+    dt_grouped = time.perf_counter() - t0
+
+    reset_scan_compile_cache()
+    t0 = time.perf_counter()
+    for cell in grid:
+        run_experiment(cell, engine="batched")
+    warm_percell = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for cell in grid:
+        run_experiment(cell, engine="batched")
+    dt_percell = time.perf_counter() - t0
+
+    return {
+        "config": {"scenarios": list(scenarios), "n_seeds": n_seeds,
+                   "n_epochs": n_epochs, "n_cells": n_cells,
+                   "n_groups": len(groups),
+                   "platform": platform.platform(),
+                   "python": platform.python_version()},
+        "grouped": {"seconds": dt_grouped,
+                    "cells_per_sec": n_cells / dt_grouped,
+                    "first_run_seconds": warm_grouped,
+                    "scan_traces": grouped_traces},
+        "per_cell": {"seconds": dt_percell,
+                     "cells_per_sec": n_cells / dt_percell,
+                     "first_run_seconds": warm_percell},
+        "speedup": dt_percell / dt_grouped,
+        "rows": [r.row() for r in rows],
+    }
+
+
+def main(report=None) -> None:
+    """benchmarks.run hook: smoke-sized rows through the CSV contract."""
+    res = run_suite(**SMOKE)
+    if report is not None:
+        report("grid_sweep.grouped", 1e6 * res["grouped"]["seconds"],
+               f"cells_per_sec={res['grouped']['cells_per_sec']:.2f},"
+               f"groups={res['config']['n_groups']},"
+               f"traces={res['grouped']['scan_traces']}")
+        report("grid_sweep.per_cell", 1e6 * res["per_cell"]["seconds"],
+               f"cells_per_sec={res['per_cell']['cells_per_sec']:.2f},"
+               f"speedup={res['speedup']:.2f}x")
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI-sized grid (2 scenarios, 8 seeds)")
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="override seeds per cell")
+    ap.add_argument("--epochs", type=int, default=None,
+                    help="override epochs per cell")
+    ap.add_argument("--scenarios", nargs="*", default=None)
+    ap.add_argument("--out", default="BENCH_grid.json",
+                    help="JSON artifact path")
+    args = ap.parse_args()
+    cfg = dict(SMOKE if args.smoke else FULL)
+    if args.seeds is not None:
+        cfg["n_seeds"] = args.seeds
+    if args.epochs is not None:
+        cfg["n_epochs"] = args.epochs
+    if args.scenarios:
+        cfg["scenarios"] = args.scenarios
+    res = run_suite(**cfg)
+    g, p = res["grouped"], res["per_cell"]
+    print(f"{res['config']['n_cells']} cells in "
+          f"{res['config']['n_groups']} groups "
+          f"(scan traces: {g['scan_traces']})")
+    print(f"grouped : {g['cells_per_sec']:8.2f} cells/s "
+          f"(first run {g['first_run_seconds']:.2f}s)")
+    print(f"per-cell: {p['cells_per_sec']:8.2f} cells/s "
+          f"(first run {p['first_run_seconds']:.2f}s)")
+    print(f"speedup : {res['speedup']:.2f}x")
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    _cli()

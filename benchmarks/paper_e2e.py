@@ -15,9 +15,9 @@ E2E_SCENARIOS = ["heterogeneous-rates", "fading-uplink", "bursty-stragglers"]
 
 
 def run_e2e(n_seeds: int = 3, n_epochs: int = 3, seed: int = 0) -> dict:
-    from repro.sim import compare_schemes
-    return {name: compare_schemes(name, n_seeds=n_seeds, n_epochs=n_epochs,
-                                  base_seed=seed)
+    from repro.sim import compare_schemes, scenario_spec
+    return {name: compare_schemes(scenario_spec(name), n_seeds=n_seeds,
+                                  n_epochs=n_epochs, base_seed=seed)
             for name in E2E_SCENARIOS}
 
 
@@ -29,7 +29,7 @@ def run_training_parity(epochs: int = 5, seed: int = 4) -> dict:
     from repro.data.pipeline import SyntheticClassificationDataset
     from repro.models.mlp import init_mlp, per_slot_mlp_loss
     from repro.optim import sgd_momentum
-    from repro.sim import make_cluster
+    from repro.sim import scenario_spec
 
     def trainer(scheme, cluster=None):
         ds = SyntheticClassificationDataset(6, examples_per_partition=16,
@@ -44,8 +44,8 @@ def run_training_parity(epochs: int = 5, seed: int = 4) -> dict:
     ref.run(epochs)
     out = {}
     for scheme in ["two-stage", "cyclic", "fractional", "uncoded"]:
-        tr = trainer(scheme, cluster=make_cluster(
-            "heterogeneous-rates", scheme=scheme, seed=seed))
+        # FELTrainer resolves a ScenarioSpec for its own scheme and seed
+        tr = trainer(scheme, cluster=scenario_spec("heterogeneous-rates"))
         logs = tr.run(epochs)
         delta = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
                     for a, b in zip(jax.tree.leaves(ref.params),

@@ -14,7 +14,7 @@ def report(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 SUITES = ["paper_fel", "paper_lyapunov", "paper_e2e", "paper_ablations",
-          "fleet_scale", "kernel_bench", "roofline_table"]
+          "fleet_scale", "grid_sweep", "kernel_bench", "roofline_table"]
 
 
 def main() -> None:

@@ -15,7 +15,8 @@ import argparse
 
 
 def main() -> None:
-    from repro.sim import available_scenarios, compare_schemes, get_scenario
+    from repro.sim import (available_scenarios, compare_schemes,
+                           scenario_spec)
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario", default="heterogeneous-rates",
@@ -30,9 +31,9 @@ def main() -> None:
 
     names = available_scenarios() if args.all else [args.scenario]
     for name in names:
-        sc = get_scenario(name)
+        sc = scenario_spec(name)
         print(f"\n=== {sc.name} ===\n    {sc.description}")
-        fleets = compare_schemes(name, schemes=args.schemes,
+        fleets = compare_schemes(sc, schemes=args.schemes,
                                  n_seeds=args.seeds, n_epochs=args.epochs)
         for summary in fleets.values():
             print("  " + summary.row())

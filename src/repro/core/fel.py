@@ -14,12 +14,13 @@ Two epoch-simulation backends (DESIGN.md §3.4):
 
   * the legacy instant-uplink path (default) — compute time only, the
     uplink is free, decode fires when enough workers have *computed*;
-  * ``cluster=`` an ``repro.sim.cluster.EdgeCluster`` — the closed-loop
-    co-simulator: coded partial gradients drain through the Lyapunov
-    P4–P7 scheduler and decode fires only once enough contributions have
-    *arrived*, so every ``EpochLog`` carries a compute/comm wall-clock
-    breakdown.  All four schemes run under identical sampled compute and
-    channel behaviour via ``repro.sim.scenarios.make_cluster``.
+  * ``cluster=`` an ``repro.sim.cluster.EdgeCluster`` or a declarative
+    ``repro.sim.spec.ScenarioSpec`` (built for this trainer's scheme and
+    seed via ``build_cluster``) — the closed-loop co-simulator: coded
+    partial gradients drain through the Lyapunov P4–P7 scheduler and
+    decode fires only once enough contributions have *arrived*, so every
+    ``EpochLog`` carries a compute/comm wall-clock breakdown.  All four
+    schemes run under identical sampled compute and channel behaviour.
 """
 from __future__ import annotations
 
@@ -72,6 +73,14 @@ class FELTrainer:
         self.step_fn = jax.jit(make_coded_train_step(per_slot_loss, optimizer))
         self._rng = np.random.default_rng(seed + 99)
         self.logs: list = []
+        if cluster is not None and not hasattr(cluster, "run_epoch"):
+            # declarative path: a ScenarioSpec is resolved for this
+            # trainer's scheme and seed through the one spec resolver
+            from repro.sim.spec import ScenarioSpec, build_cluster
+            if not isinstance(cluster, ScenarioSpec):
+                raise TypeError(f"cluster= wants an EdgeCluster or a "
+                                f"ScenarioSpec, got {type(cluster).__name__}")
+            cluster = build_cluster(cluster, scheme, seed)
         self.cluster = cluster
 
         if cluster is not None:

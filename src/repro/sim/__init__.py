@@ -5,21 +5,44 @@ Lyapunov-scheduled transmission phase (paper §4) inside one epoch:
 stage-1 coded compute → deadline → stage-2 planning → per-slot
 drift-plus-penalty uplink of each worker's partial-gradient bytes → decode
 once enough coded contributions have *arrived* (not merely been computed).
+
+Experiments are declarative (DESIGN.md §3.6): a scenario is a frozen
+:class:`ScenarioSpec` (pytree data, JSON round-trippable), resolved into a
+live cluster by :func:`build_cluster`; grids of :class:`ExperimentSpec`
+cells run through :func:`sweep`, which shares one scan compile per
+physics-compatibility group.
 """
 from .events import Event, EventEngine, COMPUTE_DONE, SLOT_TICK
 from .channel import (ChannelModel, CommTape, GilbertElliottChannel,
                       StaticChannel, TraceChannel)
 from .cluster import CommJob, CommParams, CommStats, EdgeCluster
-from .scenarios import available_scenarios, get_scenario, make_cluster
-from .batched import BatchedFleet, run_fleet_batched
-from .montecarlo import FleetSummary, compare_schemes, run_fleet
+from .spec import (ChannelSpec, CommSpec, ComputeSpec, EnergySpec,
+                   ExperimentSpec, GilbertElliottChannelSpec, ScenarioSpec,
+                   StaticChannelSpec, TraceChannelSpec, as_channel_spec,
+                   build_cluster, split_comm_params)
+from .scenarios import (available_scenarios, get_scenario, make_cluster,
+                        register_scenario, resolve_scenario, scenario_spec,
+                        SCENARIOS)
+from .batched import (BatchedFleet, run_fleet_batched, scan_trace_count,
+                      reset_scan_compile_cache)
+from .montecarlo import (FleetSummary, compare_schemes, run_experiment,
+                         run_fleet, summarize_fleet)
+from .sweep import compat_key, plan_groups, sweep
 
 __all__ = [
     "Event", "EventEngine", "COMPUTE_DONE", "SLOT_TICK",
     "ChannelModel", "CommTape", "StaticChannel", "GilbertElliottChannel",
     "TraceChannel",
     "CommJob", "CommParams", "CommStats", "EdgeCluster",
-    "available_scenarios", "get_scenario", "make_cluster",
-    "BatchedFleet", "run_fleet_batched",
-    "FleetSummary", "run_fleet", "compare_schemes",
+    "ChannelSpec", "CommSpec", "ComputeSpec", "EnergySpec",
+    "ExperimentSpec", "GilbertElliottChannelSpec", "ScenarioSpec",
+    "StaticChannelSpec", "TraceChannelSpec", "as_channel_spec",
+    "build_cluster", "split_comm_params",
+    "SCENARIOS", "available_scenarios", "get_scenario", "make_cluster",
+    "register_scenario", "resolve_scenario", "scenario_spec",
+    "BatchedFleet", "run_fleet_batched", "scan_trace_count",
+    "reset_scan_compile_cache",
+    "FleetSummary", "run_fleet", "run_experiment", "compare_schemes",
+    "summarize_fleet",
+    "compat_key", "plan_groups", "sweep",
 ]

@@ -44,13 +44,32 @@ from repro.core.runtime import EpochResult
 from repro.sim.channel import TAPE_BLOCK, CommTape
 from repro.sim.cluster import (CommJob, CommStats, EdgeCluster,
                                arrived_mask, stuck_tolerance)
-from repro.sim.scenarios import make_cluster
+from repro.sim.scenarios import resolve_scenario
+from repro.sim.spec import build_cluster
 
-__all__ = ["BatchedFleet", "run_fleet_batched", "CHUNK"]
+__all__ = ["BatchedFleet", "run_fleet_batched", "CHUNK",
+           "scan_trace_count", "reset_scan_compile_cache"]
 
 #: Slots advanced per device dispatch (== the tape block size, so scan
 #: chunk b consumes exactly tape block b).
 CHUNK = TAPE_BLOCK
+
+#: Times the chunk-scan body has been traced (== compilations triggered).
+#: The sweep layer's compile-sharing contract is asserted against this
+#: probe: one grouped sweep must trace at most once per compatibility
+#: group, instead of once per grid cell.
+_scan_traces = 0
+
+
+def scan_trace_count() -> int:
+    """Monotone counter of chunk-scan tracings (compilations)."""
+    return _scan_traces
+
+
+def reset_scan_compile_cache() -> None:
+    """Drop the cached jitted chunk runners (tests use this to measure
+    compile counts from a clean slate; the next fleet re-traces)."""
+    _chunk_runner.cache_clear()
 
 
 # --------------------------------------------------------------------- #
@@ -68,6 +87,9 @@ def _chunk_runner(channel_step, S: int, M: int):
     stateful = channel_step is not None
 
     def run(carry, xs, consts):
+        # executes only while jax traces, i.e. once per compilation
+        global _scan_traces
+        _scan_traces += 1
         sysp, gb, L, visible, chp = consts
         zeros = jnp.zeros((S, M), jnp.float32)
 
@@ -312,18 +334,26 @@ class BatchedFleet:
     Seeds must share the scenario physics (M, scheme, CommParams, channel
     model); the per-seed randomness — completion times, fading, harvest —
     is what varies across the batch axis.  Scenario/scheme grids map onto
-    host-level loops over fleets (see ``montecarlo.compare_schemes``).
+    fleets grouped by physics signature (see ``repro.sim.sweep``) or
+    host-level loops over fleets (``montecarlo.compare_schemes``).
+
+    ``scenario`` is a :class:`~repro.sim.spec.ScenarioSpec` (registry
+    names are accepted as a deprecated shim).
     """
 
-    def __init__(self, scenario: Optional[str] = None,
+    def __init__(self, scenario=None,
                  scheme: str = "two-stage", seeds: Sequence[int] = (0,),
                  *, clusters: Optional[Sequence[EdgeCluster]] = None,
                  **overrides):
         if clusters is None:
             if scenario is None:
-                raise ValueError("need a scenario name or explicit clusters")
-            clusters = [make_cluster(scenario, scheme=scheme, seed=int(s),
-                                     **overrides) for s in seeds]
+                raise ValueError("need a scenario spec or explicit clusters")
+            spec = resolve_scenario(scenario, overrides, warn_string=True)
+            clusters = [build_cluster(spec, scheme, int(s)) for s in seeds]
+        elif overrides:
+            raise ValueError(
+                f"overrides {sorted(overrides)} have no effect with "
+                f"explicit clusters=; apply them to the spec instead")
         clusters = list(clusters)
         if not clusters:
             raise ValueError("need at least one cluster")
@@ -364,8 +394,9 @@ class BatchedFleet:
         return [self.run_epoch(e) for e in range(n_epochs)]
 
 
-def run_fleet_batched(scenario: str, scheme: str = "two-stage", *,
+def run_fleet_batched(scenario, scheme: str = "two-stage", *,
                       seeds: Sequence[int] = (0,), n_epochs: int = 3,
                       **overrides) -> List[List[EpochResult]]:
-    """Convenience wrapper: build a fleet and run it, [epoch][seed]."""
+    """Convenience wrapper: build a fleet and run it, [epoch][seed].
+    ``scenario`` is a ScenarioSpec (names accepted, deprecated)."""
     return BatchedFleet(scenario, scheme, seeds, **overrides).run(n_epochs)

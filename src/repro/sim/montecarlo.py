@@ -24,9 +24,11 @@ import numpy as np
 from repro.core.runtime import EpochResult
 from repro.sim.batched import BatchedFleet
 from repro.sim.cluster import SCHEMES
-from repro.sim.scenarios import make_cluster
+from repro.sim.scenarios import resolve_scenario
+from repro.sim.spec import ExperimentSpec, build_cluster, fleet_seeds
 
-__all__ = ["FleetSummary", "run_fleet", "compare_schemes", "ENGINES"]
+__all__ = ["FleetSummary", "run_fleet", "run_experiment",
+           "compare_schemes", "ENGINES"]
 
 ENGINES = ("batched", "oracle")
 
@@ -59,8 +61,12 @@ class FleetSummary:
                 f"fail={self.decode_failure_rate:.2f}")
 
 
-def _summarize(scenario: str, scheme: str, n_seeds: int, n_epochs: int,
-               results: Sequence[EpochResult]) -> FleetSummary:
+def summarize_fleet(scenario: str, scheme: str, n_seeds: int,
+                    n_epochs: int,
+                    results: Sequence[EpochResult]) -> FleetSummary:
+    """Reduce seed-major per-epoch results to a :class:`FleetSummary`
+    (shared by ``run_fleet`` and the grouped ``repro.sim.sweep`` path, so
+    a sweep cell's row is bit-identical to its standalone fleet)."""
     times = [r.time for r in results]
     comp = [r.compute_time for r in results]
     comm = [r.comm_time for r in results]
@@ -90,43 +96,52 @@ def _summarize(scenario: str, scheme: str, n_seeds: int, n_epochs: int,
         mean_stragglers=float(np.mean(strag)))
 
 
-def _fleet_seeds(n_seeds: int, base_seed: int) -> List[int]:
-    return [base_seed + 1000 * i for i in range(n_seeds)]
-
-
-def run_fleet(scenario: str, scheme: str = "two-stage", *,
+def run_fleet(scenario, scheme: str = "two-stage", *,
               n_seeds: int = 8, n_epochs: int = 3, base_seed: int = 0,
               engine: str = "batched", **overrides) -> FleetSummary:
     """Monte-Carlo fleet: ``n_seeds`` clusters × ``n_epochs`` epochs.
 
-    ``engine="batched"`` (default) advances all seeds together through the
-    vmap fleet engine; ``engine="oracle"`` runs each seed through the
-    event-driven reference loop.  Same seeds, same tapes, same results.
+    ``scenario`` is a :class:`~repro.sim.spec.ScenarioSpec` (registry
+    names are accepted as a deprecated shim); ``**overrides`` are
+    validated spec-field overrides.  ``engine="batched"`` (default)
+    advances all seeds together through the vmap fleet engine;
+    ``engine="oracle"`` runs each seed through the event-driven reference
+    loop.  Same seeds, same tapes, same results.
     """
     if n_seeds < 1 or n_epochs < 1:
         raise ValueError(f"need n_seeds >= 1 and n_epochs >= 1, got "
                          f"n_seeds={n_seeds}, n_epochs={n_epochs}")
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
-    seeds = _fleet_seeds(n_seeds, base_seed)
+    spec = resolve_scenario(scenario, overrides, warn_string=True)
+    seeds = fleet_seeds(n_seeds, base_seed)
     results: List[EpochResult] = []
     if engine == "oracle":
         for s in seeds:
-            cluster = make_cluster(scenario, scheme=scheme, seed=s,
-                                   **overrides)
+            cluster = build_cluster(spec, scheme, s)
             results.extend(cluster.run_epoch(e) for e in range(n_epochs))
     else:
-        fleet = BatchedFleet(scenario, scheme, seeds, **overrides)
+        fleet = BatchedFleet(spec, scheme, seeds)
         per_epoch = fleet.run(n_epochs)                    # [epoch][seed]
         # seed-major order, matching the oracle loop, so both engines feed
         # the summary reductions identically (bitwise-equal summaries)
         results.extend(per_epoch[e][i] for i in range(n_seeds)
                        for e in range(n_epochs))
-    return _summarize(scenario, scheme, n_seeds, n_epochs, results)
+    return summarize_fleet(spec.name, scheme, n_seeds, n_epochs, results)
 
 
-def compare_schemes(scenario: str, schemes: Optional[Sequence[str]] = None,
+def run_experiment(exp: ExperimentSpec, *,
+                   engine: str = "batched") -> FleetSummary:
+    """Run one declarative grid cell — the spec-native ``run_fleet``."""
+    return run_fleet(exp.scenario, exp.scheme, n_seeds=exp.n_seeds,
+                     n_epochs=exp.n_epochs, base_seed=exp.base_seed,
+                     engine=engine)
+
+
+def compare_schemes(scenario, schemes: Optional[Sequence[str]] = None,
                     **kwargs) -> dict:
-    """All schemes under one scenario/seed list → {scheme: FleetSummary}."""
-    return {s: run_fleet(scenario, scheme=s, **kwargs)
+    """All schemes under one scenario/seed list → {scheme: FleetSummary}.
+    ``scenario`` is a ScenarioSpec (names accepted, deprecated)."""
+    spec = resolve_scenario(scenario, warn_string=True)
+    return {s: run_fleet(spec, scheme=s, **kwargs)
             for s in (schemes or SCHEMES)}

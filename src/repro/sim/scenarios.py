@@ -1,57 +1,61 @@
-"""Named co-simulation scenarios (DESIGN.md §3.3).
+"""Named co-simulation scenarios as declarative data (DESIGN.md §3.6).
 
-Each scenario fixes a cluster's compute heterogeneity, channel model and
-energy physics; the coding scheme and seed stay free so all four schemes
-(two-stage / cyclic / fractional / uncoded) run under identical scenario
-conditions.  Scenario motivation follows the paper's "practical network
-conditions" evaluation plus the heterogeneous-rate and fading settings of
-hierarchical gradient coding (arXiv:2406.10831) and heterogeneous-straggler
-approximate coding (arXiv:2510.22539).
+The registry is a typed table of :class:`~repro.sim.spec.ScenarioSpec`
+values — plain frozen dataclasses, not builder closures.  Each spec fixes
+a cluster's compute heterogeneity, channel model and energy physics; the
+coding scheme and seed stay free so all four schemes (two-stage / cyclic /
+fractional / uncoded) run under identical scenario conditions.  Scenario
+motivation follows the paper's "practical network conditions" evaluation
+plus the heterogeneous-rate and fading settings of hierarchical gradient
+coding (arXiv:2406.10831) and heterogeneous-straggler approximate coding
+(arXiv:2510.22539).
 
-    cluster = make_cluster("fading-uplink", scheme="two-stage", seed=3)
-    res = cluster.run_epoch(0)
+    spec = scenario_spec("fading-uplink")
+    res = build_cluster(spec, scheme="two-stage", seed=3).run_epoch(0)
+
+``make_cluster``/``get_scenario`` survive as thin deprecated wrappers
+over the spec path (bit-identical results, enforced by
+``tests/test_spec.py``).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional
+import warnings
+from typing import Dict, List, Union
 
-import numpy as np
+from repro.sim.cluster import EdgeCluster
+from repro.sim.spec import (CommSpec, ComputeSpec, EnergySpec,
+                            GilbertElliottChannelSpec, ScenarioSpec,
+                            StaticChannelSpec, TraceChannelSpec,
+                            build_cluster)
 
-from repro.sim.channel import (GilbertElliottChannel, StaticChannel,
-                               TraceChannel)
-from repro.sim.cluster import CommParams, EdgeCluster
-
-__all__ = ["Scenario", "SCENARIOS", "register_scenario",
-           "available_scenarios", "get_scenario", "make_cluster"]
+__all__ = ["SCENARIOS", "register_scenario", "available_scenarios",
+           "scenario_spec", "resolve_scenario", "get_scenario",
+           "make_cluster"]
 
 # default cluster size: the paper's 6-node edge cluster, K == M partitions
-_M, _K = 6, 6
+_M = 6
+
+#: The registry — scenario name → declarative spec (data, not closures).
+SCENARIOS: Dict[str, ScenarioSpec] = {}
 
 
-@dataclasses.dataclass(frozen=True)
-class Scenario:
-    name: str
-    description: str
-    builder: Callable[..., EdgeCluster]
+def register_scenario(spec: ScenarioSpec) -> ScenarioSpec:
+    """Add a spec to the registry under ``spec.name`` (idempotent on
+    equal respecs; a conflicting re-registration raises)."""
+    old = SCENARIOS.get(spec.name)
+    if old is not None and old != spec:
+        raise ValueError(f"scenario {spec.name!r} already registered "
+                         f"with a different spec")
+    SCENARIOS[spec.name] = spec
+    return spec
 
 
-SCENARIOS: dict = {}
-
-
-def register_scenario(name: str, description: str):
-    def deco(fn):
-        SCENARIOS[name] = Scenario(name=name, description=description,
-                                   builder=fn)
-        return fn
-    return deco
-
-
-def available_scenarios() -> list:
+def available_scenarios() -> List[str]:
     return sorted(SCENARIOS)
 
 
-def get_scenario(name: str) -> Scenario:
+def scenario_spec(name: str) -> ScenarioSpec:
+    """Registry lookup: scenario name → :class:`ScenarioSpec`."""
     try:
         return SCENARIOS[name]
     except KeyError:
@@ -59,112 +63,131 @@ def get_scenario(name: str) -> Scenario:
                        f"available: {available_scenarios()}") from None
 
 
-def make_cluster(name: str, scheme: str = "two-stage", seed: int = 0,
-                 **overrides) -> EdgeCluster:
-    """Build the named scenario's cluster for one scheme and seed."""
-    return get_scenario(name).builder(scheme=scheme, seed=seed, **overrides)
-
-
-def _cluster(scheme, seed, defaults: dict, over: dict) -> EdgeCluster:
-    """Merge a scenario's default physics with caller overrides — any
-    EdgeCluster kwarg (rates, channel, comm, noise_scale, fault_prob, …)
-    can be overridden per call."""
-    cfg = dict(defaults)
-    cfg.update(over)
-    M = cfg.pop("M", _M)
-    K = cfg.pop("K", _K)
-    cfg.setdefault("M1", max(M // 2 + 1, 1))
-    return EdgeCluster(M, K, scheme=scheme, seed=seed, **cfg)
+def resolve_scenario(scenario: Union[str, ScenarioSpec],
+                     overrides: dict = None, *,
+                     warn_string: bool = False) -> ScenarioSpec:
+    """Coerce a registry name or a spec (plus validated overrides) into a
+    final :class:`ScenarioSpec` — the shared front door of ``run_fleet``,
+    ``BatchedFleet`` and the deprecated string wrappers."""
+    if isinstance(scenario, str):
+        if warn_string:
+            warnings.warn(
+                "string-keyed scenario APIs are deprecated; pass a "
+                "ScenarioSpec (repro.sim.scenario_spec(name)) instead",
+                DeprecationWarning, stacklevel=3)
+        scenario = scenario_spec(scenario)
+    elif not isinstance(scenario, ScenarioSpec):
+        raise TypeError(f"expected a scenario name or ScenarioSpec, got "
+                        f"{type(scenario).__name__}")
+    if overrides:
+        scenario = scenario.with_overrides(**overrides)
+    return scenario
 
 
 # --------------------------------------------------------------------- #
-@register_scenario(
-    "homogeneous",
-    "Equal compute rates, equal static uplinks — the control scenario.")
-def _homogeneous(scheme="two-stage", seed=0, **over):
-    return _cluster(scheme, seed, dict(
-        rates=np.full(_M, 4.0),
-        channel=StaticChannel(np.full(_M, 4.0)),
-        comm=CommParams(grad_bytes=1.0, slot_T=0.1, n_subchannels=2.0),
-        noise_scale=0.15), over)
+# deprecated string wrappers (thin shims over the spec path)
+# --------------------------------------------------------------------- #
+def get_scenario(name: str) -> ScenarioSpec:
+    """Deprecated alias of :func:`scenario_spec`."""
+    warnings.warn("get_scenario is deprecated; use scenario_spec(name)",
+                  DeprecationWarning, stacklevel=2)
+    return scenario_spec(name)
 
 
-@register_scenario(
-    "heterogeneous-rates",
-    "Paper's 2/2/4/4/8/8 compute cluster plus a matching spread of uplink "
-    "capacities — slow compute correlates with slow links.")
-def _heterogeneous(scheme="two-stage", seed=0, **over):
-    return _cluster(scheme, seed, dict(
-        rates=np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0]),
-        channel=StaticChannel(np.array([1.5, 1.5, 3.0, 3.0, 6.0, 6.0])),
-        comm=CommParams(grad_bytes=1.0, slot_T=0.1, n_subchannels=2.0),
-        noise_scale=0.2), over)
+def make_cluster(name: str, scheme: str = "two-stage", seed: int = 0,
+                 **overrides) -> EdgeCluster:
+    """Deprecated: build the named scenario's cluster for one scheme and
+    seed.  Equivalent to
+    ``build_cluster(scenario_spec(name).with_overrides(**overrides),
+    scheme, seed)`` — and bit-identical to it."""
+    warnings.warn(
+        "make_cluster is deprecated; use "
+        "build_cluster(scenario_spec(name), scheme=..., seed=...)",
+        DeprecationWarning, stacklevel=2)
+    return build_cluster(resolve_scenario(name, overrides), scheme, seed)
 
 
-@register_scenario(
-    "bursty-stragglers",
-    "1–2 random 8x stragglers per epoch (paper's straggler injection) on a "
-    "healthy static network — stresses the stage-2 re-coding path.")
-def _bursty(scheme="two-stage", seed=0, **over):
-    return _cluster(scheme, seed, dict(
-        straggler_prob=0.25, straggler_slow=8.0,
-        rates=np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0]),
-        channel=StaticChannel(np.full(_M, 4.0)),
-        comm=CommParams(grad_bytes=1.0, slot_T=0.1, n_subchannels=2.0),
-        noise_scale=0.2), over)
+# --------------------------------------------------------------------- #
+# the shipped registry (paper's 6-node cluster, K == M partitions)
+# --------------------------------------------------------------------- #
+_PAPER_RATES = (2.0, 2.0, 4.0, 4.0, 8.0, 8.0)
+
+register_scenario(ScenarioSpec(
+    name="homogeneous",
+    description="Equal compute rates, equal static uplinks — the control "
+                "scenario.",
+    M=_M, K=_M,
+    compute=ComputeSpec(rates=(4.0,) * _M, noise_scale=0.15),
+    channel=StaticChannelSpec(rates=(4.0,) * _M)))
+
+register_scenario(ScenarioSpec(
+    name="heterogeneous-rates",
+    description="Paper's 2/2/4/4/8/8 compute cluster plus a matching "
+                "spread of uplink capacities — slow compute correlates "
+                "with slow links.",
+    M=_M, K=_M,
+    compute=ComputeSpec(rates=_PAPER_RATES),
+    channel=StaticChannelSpec(rates=(1.5, 1.5, 3.0, 3.0, 6.0, 6.0))))
+
+register_scenario(ScenarioSpec(
+    name="bursty-stragglers",
+    description="1–2 random 8x stragglers per epoch (paper's straggler "
+                "injection) on a healthy static network — stresses the "
+                "stage-2 re-coding path.",
+    M=_M, K=_M,
+    compute=ComputeSpec(rates=_PAPER_RATES, straggler_prob=0.25,
+                        straggler_slow=8.0),
+    channel=StaticChannelSpec(rates=(4.0,) * _M)))
+
+register_scenario(ScenarioSpec(
+    name="fading-uplink",
+    description="Gilbert–Elliott two-state fading: links burst between a "
+                "good rate and a deep fade — stresses the arrival-gated "
+                "decode.",
+    M=_M, K=_M,
+    compute=ComputeSpec(rates=_PAPER_RATES),
+    channel=GilbertElliottChannelSpec(
+        rate_good=(5.0,) * _M, rate_bad=(0.25,) * _M,
+        p_gb=0.15, p_bg=0.35, start_good=False)))
+
+register_scenario(ScenarioSpec(
+    name="energy-harvesting-constrained",
+    description="Tiny batteries replenished by a weak stochastic harvest; "
+                "the P6/P7 perturbed energy queues make the uplink the "
+                "epoch bottleneck.",
+    M=_M, K=_M,
+    compute=ComputeSpec(rates=_PAPER_RATES),
+    channel=StaticChannelSpec(rates=(4.0,) * _M),
+    energy=EnergySpec(tx_power=4.0, E0=0.2, E_cap=1.0,
+                      harvest_mean=0.12, harvest_jitter=0.5)))
+
+register_scenario(ScenarioSpec(
+    name="saturated-uplink",
+    description="Gradient payloads an order of magnitude above per-slot "
+                "link capacity: the epoch is dominated by a long, "
+                "P7-contended drain of the backlog queues — the "
+                "comm-bound regime where fleet-scale sweeps live or die.",
+    M=_M, K=_M,
+    compute=ComputeSpec(rates=_PAPER_RATES),
+    channel=StaticChannelSpec(rates=(1.5, 1.5, 3.0, 3.0, 6.0, 6.0)),
+    comm=CommSpec(grad_bytes=16.0)))
 
 
-@register_scenario(
-    "fading-uplink",
-    "Gilbert–Elliott two-state fading: links burst between a good rate and "
-    "a deep fade — stresses the arrival-gated decode.")
-def _fading(scheme="two-stage", seed=0, **over):
-    return _cluster(scheme, seed, dict(
-        rates=np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0]),
-        channel=GilbertElliottChannel(
-            rate_good=np.full(_M, 5.0), rate_bad=np.full(_M, 0.25),
-            p_gb=0.15, p_bg=0.35, start_good=False),
-        comm=CommParams(grad_bytes=1.0, slot_T=0.1, n_subchannels=2.0),
-        noise_scale=0.2), over)
+def _flash_crowd_trace() -> tuple:
+    rows = []
+    base = (1.5, 1.5, 3.0, 3.0, 6.0, 6.0)
+    for t in range(30):
+        scale = 0.1 if 8 <= t < 20 else 1.0     # the crowd arrives
+        rows.append(tuple(scale * r for r in base))
+    return tuple(rows)
 
 
-@register_scenario(
-    "energy-harvesting-constrained",
-    "Tiny batteries replenished by a weak stochastic harvest; the P6/P7 "
-    "perturbed energy queues make the uplink the epoch bottleneck.")
-def _energy(scheme="two-stage", seed=0, **over):
-    return _cluster(scheme, seed, dict(
-        rates=np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0]),
-        channel=StaticChannel(np.full(_M, 4.0)),
-        comm=CommParams(grad_bytes=1.0, slot_T=0.1, n_subchannels=2.0,
-                        tx_power=4.0, E0=0.2, E_cap=1.0,
-                        harvest_mean=0.12, harvest_jitter=0.5),
-        noise_scale=0.2), over)
-
-
-@register_scenario(
-    "saturated-uplink",
-    "Gradient payloads an order of magnitude above per-slot link capacity: "
-    "the epoch is dominated by a long, P7-contended drain of the backlog "
-    "queues — the comm-bound regime where fleet-scale sweeps live or die.")
-def _saturated(scheme="two-stage", seed=0, **over):
-    return _cluster(scheme, seed, dict(
-        rates=np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0]),
-        channel=StaticChannel(np.array([1.5, 1.5, 3.0, 3.0, 6.0, 6.0])),
-        comm=CommParams(grad_bytes=16.0, slot_T=0.1, n_subchannels=2.0),
-        noise_scale=0.2), over)
-
-
-@register_scenario(
-    "flash-crowd",
-    "Trace-driven congestion: uplink capacity collapses to 10% for a burst "
-    "of slots mid-epoch, then recovers (cross-traffic flash crowd).")
-def _flash_crowd(scheme="two-stage", seed=0, **over):
-    base = np.tile(np.array([1.5, 1.5, 3.0, 3.0, 6.0, 6.0]), (30, 1))
-    base[8:20] *= 0.1                       # the crowd arrives
+register_scenario(ScenarioSpec(
+    name="flash-crowd",
+    description="Trace-driven congestion: uplink capacity collapses to "
+                "10% for a burst of slots mid-epoch, then recovers "
+                "(cross-traffic flash crowd).",
+    M=_M, K=_M,
+    compute=ComputeSpec(rates=_PAPER_RATES),
     # loop=False: one-shot collapse, last (healthy) row holds afterwards
-    return _cluster(scheme, seed, dict(
-        rates=np.array([2.0, 2.0, 4.0, 4.0, 8.0, 8.0]),
-        channel=TraceChannel(base, loop=False),
-        comm=CommParams(grad_bytes=1.0, slot_T=0.1, n_subchannels=2.0),
-        noise_scale=0.2), over)
+    channel=TraceChannelSpec(trace=_flash_crowd_trace(), loop=False)))

@@ -1,0 +1,93 @@
+"""Grid sweeps that share one compile per physics group (DESIGN.md §3.6).
+
+A sweep grid is a sequence of :class:`~repro.sim.spec.ExperimentSpec`
+cells (scenario × scheme × seeds × epochs).  Cells whose *static physics
+signature* matches — same worker count ``M``, same scheme topology, same
+channel spec (⟹ equal ``physics_key()``), same comm/energy physics
+including the slot cap — are stacked along the batched engine's existing
+fleet axis and run through **one** :class:`~repro.sim.batched.BatchedFleet`,
+so the whole group compiles the slot scan once instead of once per cell.
+Results are unstacked into per-cell :class:`FleetSummary` rows that are
+bit-identical to running each cell alone with
+``run_fleet(engine="batched")``:
+
+  * every lane draws from its own per-seed :class:`CommTape`, and the
+    vmapped slot scan never mixes lanes, so a lane's epoch results do not
+    depend on which other lanes share the batch;
+  * a group runs ``max(n_epochs)`` epochs — a cell wanting fewer epochs
+    just has its later epochs dropped (extra epochs only advance that
+    lane's private RNG stream, never the kept results);
+  * cells are summarized with the same seed-major reduction
+    (:func:`~repro.sim.montecarlo.summarize_fleet`) ``run_fleet`` uses.
+
+The compile-sharing contract is asserted in ``tests/test_sweep.py``
+against :func:`~repro.sim.batched.scan_trace_count`: a grouped sweep
+traces the scan body at most once per compatibility group (groups of
+equal fleet shape and channel kind even share a single trace).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+from repro.sim.batched import BatchedFleet
+from repro.sim.montecarlo import FleetSummary, run_experiment, \
+    summarize_fleet
+from repro.sim.spec import ExperimentSpec, build_cluster
+
+__all__ = ["compat_key", "plan_groups", "sweep"]
+
+
+def compat_key(exp: ExperimentSpec) -> Tuple:
+    """Hashable static-physics signature of a grid cell.
+
+    Two cells with equal keys satisfy ``BatchedFleet``'s homogeneity
+    requirement (same ``M``, scheme, channel physics, CommParams
+    including ``grad_bytes`` and ``max_slots``) and may therefore share
+    one stacked fleet.  Compute-phase heterogeneity (rates, stragglers,
+    stage sizing) is host-side per-lane state and deliberately *not*
+    part of the key.
+    """
+    sc = exp.scenario
+    return (exp.scheme, sc.M, sc.channel, sc.comm, sc.energy)
+
+
+def plan_groups(grid: Sequence[ExperimentSpec]) -> List[List[int]]:
+    """Partition grid-cell indices into compile-sharing groups, ordered
+    by first appearance (cells keep their input order within a group)."""
+    groups: Dict[Tuple, List[int]] = {}
+    for i, exp in enumerate(grid):
+        if not isinstance(exp, ExperimentSpec):
+            raise TypeError(f"grid[{i}] is {type(exp).__name__}, "
+                            f"expected ExperimentSpec")
+        groups.setdefault(compat_key(exp), []).append(i)
+    return list(groups.values())
+
+
+def sweep(grid: Sequence[ExperimentSpec], *,
+          engine: str = "batched") -> List[FleetSummary]:
+    """Run every grid cell, one :class:`FleetSummary` per cell in input
+    order.  With the default batched engine, physics-compatible cells are
+    stacked into one fleet per group; ``engine="oracle"`` runs each cell
+    through the event-driven reference loop instead (the differential
+    baseline)."""
+    grid = list(grid)
+    groups = plan_groups(grid)      # also validates cell types, any engine
+    if engine != "batched":
+        return [run_experiment(exp, engine=engine) for exp in grid]
+    rows: List[FleetSummary] = [None] * len(grid)       # type: ignore
+    for idxs in groups:
+        cells = [grid[i] for i in idxs]
+        clusters = [build_cluster(c.scenario, c.scheme, seed)
+                    for c in cells for seed in c.seeds]
+        fleet = BatchedFleet(clusters=clusters)
+        per_epoch = fleet.run(max(c.n_epochs for c in cells))
+        lane = 0
+        for i, cell in zip(idxs, cells):
+            # seed-major unstack, exactly run_fleet's reduction order
+            results = [per_epoch[e][lane + j]
+                       for j in range(cell.n_seeds)
+                       for e in range(cell.n_epochs)]
+            rows[i] = summarize_fleet(cell.scenario.name, cell.scheme,
+                                      cell.n_seeds, cell.n_epochs, results)
+            lane += cell.n_seeds
+    return rows

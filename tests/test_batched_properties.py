@@ -16,15 +16,11 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.sim import BatchedFleet, run_fleet
-from repro.sim.cluster import CommParams, SCHEMES
+from repro.sim import BatchedFleet, run_fleet, scenario_spec
+from repro.sim.cluster import SCHEMES
 
 # one (n_seeds, M) shape so the whole suite shares a single scan compile
 N_SEEDS = 2
-
-
-def _comm(grad_bytes):
-    return CommParams(grad_bytes=grad_bytes, slot_T=0.1, n_subchannels=2.0)
 
 
 @settings(deadline=None, max_examples=10)
@@ -32,9 +28,9 @@ def _comm(grad_bytes):
        scheme=st.sampled_from(SCHEMES),
        grad_bytes=st.sampled_from([0.5, 1.0, 3.0]))
 def test_slotted_comm_invariants(base_seed, scheme, grad_bytes):
-    fleet = BatchedFleet("heterogeneous-rates", scheme,
-                         [base_seed, base_seed + 77],
-                         comm=_comm(grad_bytes))
+    spec = scenario_spec("heterogeneous-rates").with_overrides(
+        grad_bytes=grad_bytes)
+    fleet = BatchedFleet(spec, scheme, [base_seed, base_seed + 77])
     for row in fleet.run(2):
         for res in row:
             s = res.comm
@@ -61,7 +57,7 @@ def test_slotted_comm_invariants(base_seed, scheme, grad_bytes):
 @given(base_seed=st.integers(0, 2**16), scheme=st.sampled_from(SCHEMES))
 def test_same_seed_gives_bitwise_identical_fleet_summary(base_seed, scheme):
     kw = dict(n_seeds=N_SEEDS, n_epochs=2, base_seed=base_seed)
-    a = run_fleet("homogeneous", scheme, **kw)
-    b = run_fleet("homogeneous", scheme, **kw)
+    a = run_fleet(scenario_spec("homogeneous"), scheme, **kw)
+    b = run_fleet(scenario_spec("homogeneous"), scheme, **kw)
     # dataclass equality over float fields == bitwise determinism
     assert a == b

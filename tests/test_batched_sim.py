@@ -10,7 +10,8 @@ first left every per-seed RNG stream and predictor at the oracle's state).
 import numpy as np
 import pytest
 
-from repro.sim import BatchedFleet, available_scenarios, make_cluster
+from repro.sim import (BatchedFleet, available_scenarios, build_cluster,
+                       scenario_spec)
 from repro.sim.cluster import SCHEMES
 
 SEEDS = [0, 101, 1002]
@@ -48,10 +49,11 @@ def _assert_epoch_matches(oracle, batched, ctx):
 @pytest.mark.parametrize("scheme", SCHEMES)
 @pytest.mark.parametrize("scenario", available_scenarios())
 def test_batched_engine_matches_oracle(scenario, scheme):
-    fleet = BatchedFleet(scenario, scheme, SEEDS)
+    spec = scenario_spec(scenario)
+    fleet = BatchedFleet(spec, scheme, SEEDS)
     batched = fleet.run(N_EPOCHS)                       # [epoch][seed]
     for i, seed in enumerate(SEEDS):
-        cluster = make_cluster(scenario, scheme=scheme, seed=seed)
+        cluster = build_cluster(spec, scheme, seed)
         for e in range(N_EPOCHS):
             _assert_epoch_matches(
                 cluster.run_epoch(e), batched[e][i],
@@ -62,8 +64,9 @@ def test_engines_leave_identical_rng_streams():
     """After a matched epoch both engines must have consumed the same
     randomness: a further oracle epoch on each side still matches."""
     seeds = [7]
-    fleet = BatchedFleet("fading-uplink", "two-stage", seeds)
-    oracle = make_cluster("fading-uplink", scheme="two-stage", seed=7)
+    spec = scenario_spec("fading-uplink")
+    fleet = BatchedFleet(spec, "two-stage", seeds)
+    oracle = build_cluster(spec, "two-stage", 7)
     fleet.run_epoch(0)
     oracle.run_epoch(0)
     # epoch 1 run through the *oracle* loop on both clusters: identical
@@ -81,12 +84,11 @@ def test_batched_matches_oracle_with_non_f32_payload():
     D input is f32 in both), so results still match bit-for-bit."""
     from repro.sim.cluster import CommParams
     comm = CommParams(grad_bytes=0.1, slot_T=0.1, n_subchannels=2.0)
-    fleet = BatchedFleet("heterogeneous-rates", "two-stage", SEEDS,
-                         comm=comm)
+    spec = scenario_spec("heterogeneous-rates").with_overrides(comm=comm)
+    fleet = BatchedFleet(spec, "two-stage", SEEDS)
     batched = fleet.run(N_EPOCHS)
     for i, seed in enumerate(SEEDS):
-        cluster = make_cluster("heterogeneous-rates", scheme="two-stage",
-                               seed=seed, comm=comm)
+        cluster = build_cluster(spec, "two-stage", seed)
         for e in range(N_EPOCHS):
             _assert_epoch_matches(cluster.run_epoch(e), batched[e][i],
                                   f"gb=0.1 seed={seed} epoch={e}")
@@ -98,9 +100,11 @@ def test_batched_fleet_accepts_ndarray_grad_bytes():
     of tripping over ndarray __eq__ inside the dataclass comparison."""
     from repro.sim.cluster import CommParams
 
+    spec = scenario_spec("homogeneous").with_overrides(
+        comm=CommParams(grad_bytes=np.full(6, 2.0)))
+
     def mk(seed):
-        return make_cluster("homogeneous", scheme="two-stage", seed=seed,
-                            comm=CommParams(grad_bytes=np.full(6, 2.0)))
+        return build_cluster(spec, "two-stage", seed)
 
     fleet = BatchedFleet(clusters=[mk(0), mk(1)])
     batched = fleet.run_epoch(0)
@@ -110,18 +114,21 @@ def test_batched_fleet_accepts_ndarray_grad_bytes():
 
 
 def test_batched_fleet_rejects_heterogeneous_physics():
-    a = make_cluster("homogeneous", scheme="two-stage", seed=0)
-    b = make_cluster("heterogeneous-rates", scheme="two-stage", seed=1)
+    a = build_cluster(scenario_spec("homogeneous"), "two-stage", 0)
+    b = build_cluster(scenario_spec("heterogeneous-rates"), "two-stage", 1)
     with pytest.raises(ValueError, match="homogeneous physics"):
         BatchedFleet(clusters=[a, b])
-    with pytest.raises(ValueError, match="scenario name"):
+    with pytest.raises(ValueError, match="scenario spec"):
         BatchedFleet()
+    with pytest.raises(ValueError, match="no effect"):
+        BatchedFleet(clusters=[a], fault_prob=0.5)
     with pytest.raises(ValueError, match="at least one"):
         BatchedFleet(clusters=[])
 
 
 def test_batched_fleet_epoch_shape_and_comm_stats():
-    fleet = BatchedFleet("heterogeneous-rates", "two-stage", SEEDS)
+    fleet = BatchedFleet(scenario_spec("heterogeneous-rates"), "two-stage",
+                         SEEDS)
     out = fleet.run(2)
     assert len(out) == 2 and all(len(row) == len(SEEDS) for row in out)
     for row in out:

@@ -4,9 +4,13 @@ import pytest
 
 from repro.sim import (COMPUTE_DONE, BatchedFleet, EventEngine,
                        FleetSummary, GilbertElliottChannel, StaticChannel,
-                       TraceChannel, available_scenarios, compare_schemes,
-                       make_cluster, run_fleet)
+                       TraceChannel, available_scenarios, build_cluster,
+                       compare_schemes, run_fleet, scenario_spec)
 from repro.sim.cluster import SCHEMES
+
+
+def _cluster(name, scheme="two-stage", seed=0):
+    return build_cluster(scenario_spec(name), scheme, seed)
 
 
 # --------------------------------------------------------------------- #
@@ -96,7 +100,7 @@ def test_registry_has_the_six_shipped_scenarios():
     ["homogeneous", "heterogeneous-rates", "bursty-stragglers",
      "fading-uplink", "energy-harvesting-constrained", "flash-crowd"]))
 def test_every_scenario_runs_an_epoch(name):
-    res = make_cluster(name, scheme="two-stage", seed=3).run_epoch(0)
+    res = _cluster(name, seed=3).run_epoch(0)
     assert np.isfinite(res.time) and res.time > 0
     assert res.comm is not None and res.comm.n_slots > 0
 
@@ -106,7 +110,7 @@ def test_every_scenario_runs_an_epoch(name):
 # --------------------------------------------------------------------- #
 @pytest.mark.parametrize("scheme", SCHEMES)
 def test_bytes_conserved_admitted_equals_sent_plus_queued(scheme):
-    cluster = make_cluster("heterogeneous-rates", scheme=scheme, seed=11)
+    cluster = _cluster("heterogeneous-rates", scheme=scheme, seed=11)
     for epoch in range(3):
         st = cluster.run_epoch(epoch).comm
         # per-worker: admitted into Q == transmitted + still queued
@@ -123,8 +127,7 @@ def test_bytes_conserved_admitted_equals_sent_plus_queued(scheme):
 
 
 def test_energy_never_negative_and_never_overdrawn():
-    cluster = make_cluster("energy-harvesting-constrained",
-                           scheme="two-stage", seed=5)
+    cluster = _cluster("energy-harvesting-constrained", seed=5)
     for epoch in range(3):
         st = cluster.run_epoch(epoch).comm
         assert st.min_energy >= -1e-9
@@ -133,10 +136,8 @@ def test_energy_never_negative_and_never_overdrawn():
 
 
 def test_energy_scenario_is_actually_comm_bound():
-    res = make_cluster("energy-harvesting-constrained",
-                       scheme="two-stage", seed=5).run_epoch(0)
-    free = make_cluster("heterogeneous-rates",
-                        scheme="two-stage", seed=5).run_epoch(0)
+    res = _cluster("energy-harvesting-constrained", seed=5).run_epoch(0)
+    free = _cluster("heterogeneous-rates", seed=5).run_epoch(0)
     assert res.comm_time > free.comm_time  # battery throttles the uplink
 
 
@@ -157,7 +158,7 @@ def _per_partition_weight_sums(res):
 def test_decode_exact_when_gradients_arrive_through_fading(scheme):
     """Arrival-gated decode must still recover Σ_k g_k exactly: every
     partition's total slot weight is 1."""
-    cluster = make_cluster("fading-uplink", scheme=scheme, seed=9)
+    cluster = _cluster("fading-uplink", scheme=scheme, seed=9)
     for epoch in range(4):
         res = cluster.run_epoch(epoch)
         assert res.decode_ok, epoch
@@ -168,7 +169,7 @@ def test_decode_exact_when_gradients_arrive_through_fading(scheme):
 def test_decode_waits_for_arrival_not_compute():
     """The decodable set has computed long before it has arrived: wall
     clock must exceed the compute-only epoch time."""
-    cluster = make_cluster("flash-crowd", scheme="two-stage", seed=2)
+    cluster = _cluster("flash-crowd", seed=2)
     res = cluster.run_epoch(0)
     assert res.decode_ok
     assert res.time > res.compute_time
@@ -179,7 +180,7 @@ def test_decode_waits_for_arrival_not_compute():
 # regression: two-stage epoch time now strictly includes communication
 # --------------------------------------------------------------------- #
 def test_two_stage_epoch_time_includes_nonzero_comm_component():
-    cluster = make_cluster("heterogeneous-rates", scheme="two-stage", seed=1)
+    cluster = _cluster("heterogeneous-rates", seed=1)
     for epoch in range(3):
         res = cluster.run_epoch(epoch)
         assert res.comm_time > 0.0
@@ -202,7 +203,7 @@ def test_legacy_instant_uplink_path_reports_zero_comm():
 @pytest.mark.parametrize("scheme", SCHEMES)
 @pytest.mark.parametrize("scenario", ["homogeneous", "fading-uplink"])
 def test_all_schemes_complete_under_cosim(scenario, scheme):
-    res = make_cluster(scenario, scheme=scheme, seed=21).run_epoch(0)
+    res = _cluster(scenario, scheme=scheme, seed=21).run_epoch(0)
     assert np.isfinite(res.time)
     assert res.comm_time > 0.0
     assert 0.0 <= res.utilization <= 1.0
@@ -227,8 +228,7 @@ def test_trainer_through_cluster_matches_reference_trajectory():
     ref = trainer("uncoded")
     ref.run(3)
     tr = trainer("two-stage",
-                 cluster=make_cluster("heterogeneous-rates",
-                                      scheme="two-stage", seed=4))
+                 cluster=_cluster("heterogeneous-rates", seed=4))
     logs = tr.run(3)
     assert all(l.decode_ok for l in logs)
     assert all(l.comm_time > 0 for l in logs)
@@ -245,12 +245,12 @@ def test_trainer_rejects_mismatched_cluster():
     ds = SyntheticClassificationDataset(6, examples_per_partition=8,
                                         dim=16, n_classes=4, seed=7)
     params = init_mlp(jax.random.PRNGKey(0), dims=(16, 16, 4))
-    cluster = make_cluster("homogeneous", scheme="cyclic", seed=0)
+    cluster = _cluster("homogeneous", scheme="cyclic", seed=0)
     with pytest.raises(ValueError):
         FELTrainer("two-stage", 6, 6, ds, per_slot_mlp_loss,
                    sgd_momentum(lr=0.05), params, cluster=cluster)
     # sim-physics kwargs conflict with cluster= instead of being dropped
-    good = make_cluster("homogeneous", scheme="two-stage", seed=0)
+    good = _cluster("homogeneous", seed=0)
     with pytest.raises(ValueError, match="simulation physics"):
         FELTrainer("two-stage", 6, 6, ds, per_slot_mlp_loss,
                    sgd_momentum(lr=0.05), params, straggler_prob=0.5,
@@ -261,7 +261,7 @@ def test_trainer_rejects_mismatched_cluster():
 # monte-carlo fleets
 # --------------------------------------------------------------------- #
 def test_run_fleet_summary_statistics():
-    s = run_fleet("homogeneous", "two-stage", n_seeds=2, n_epochs=2)
+    s = run_fleet(scenario_spec("homogeneous"), "two-stage", n_seeds=2, n_epochs=2)
     assert s.mean_time > 0 and s.p95_time >= s.p50_time > 0
     assert s.mean_time == pytest.approx(
         s.mean_compute_time + s.mean_comm_time, rel=1e-6)
@@ -270,7 +270,7 @@ def test_run_fleet_summary_statistics():
 
 
 def test_compare_schemes_covers_all_four():
-    out = compare_schemes("homogeneous", n_seeds=1, n_epochs=1)
+    out = compare_schemes(scenario_spec("homogeneous"), n_seeds=1, n_epochs=1)
     assert set(out) == set(SCHEMES)
 
 
@@ -278,8 +278,8 @@ def test_run_fleet_engines_agree():
     """Batched and oracle engines run identical seeds through identical
     randomness tapes, so the whole summary must agree field by field."""
     kw = dict(n_seeds=2, n_epochs=2, base_seed=3)
-    a = run_fleet("fading-uplink", "two-stage", engine="oracle", **kw)
-    b = run_fleet("fading-uplink", "two-stage", engine="batched", **kw)
+    a = run_fleet(scenario_spec("fading-uplink"), "two-stage", engine="oracle", **kw)
+    b = run_fleet(scenario_spec("fading-uplink"), "two-stage", engine="batched", **kw)
     for f in ("mean_time", "std_time", "p50_time", "p95_time",
               "mean_compute_time", "mean_comm_time", "comm_fraction",
               "mean_utilization", "mean_slots", "decode_failure_rate",
@@ -289,9 +289,9 @@ def test_run_fleet_engines_agree():
 
 def test_run_fleet_rejects_bad_engine_and_sizes():
     with pytest.raises(ValueError, match="engine"):
-        run_fleet("homogeneous", engine="warp-drive")
+        run_fleet(scenario_spec("homogeneous"), engine="warp-drive")
     with pytest.raises(ValueError, match="n_seeds"):
-        run_fleet("homogeneous", n_seeds=0)
+        run_fleet(scenario_spec("homogeneous"), n_seeds=0)
 
 
 def test_fleet_summary_row_formatting():
@@ -314,22 +314,22 @@ def test_small_fleet_p95_is_an_observed_epoch_time():
     actually-observed epoch time (nearest-above order statistic), not a
     value interpolated between the top two — so p50 <= p95 <= max."""
     seeds = [0, 1000]
-    s = run_fleet("homogeneous", "two-stage", n_seeds=2, n_epochs=2)
+    s = run_fleet(scenario_spec("homogeneous"), "two-stage", n_seeds=2, n_epochs=2)
     times = [res.time
-             for row in BatchedFleet("homogeneous", "two-stage", seeds).run(2)
+             for row in BatchedFleet(scenario_spec("homogeneous"), "two-stage", seeds).run(2)
              for res in row]
     assert any(s.p95_time == pytest.approx(t, rel=1e-12) for t in times)
     assert s.p50_time <= s.p95_time <= max(times) + 1e-12
 
 
 def test_large_fleet_p95_uses_linear_interpolation():
-    s = run_fleet("homogeneous", "two-stage", n_seeds=8, n_epochs=3)
+    s = run_fleet(scenario_spec("homogeneous"), "two-stage", n_seeds=8, n_epochs=3)
     assert s.n_seeds * s.n_epochs >= 20
     assert s.p50_time <= s.p95_time
     assert s.decode_failure_rate == 0.0
     # >= 20 samples: percentiles are numpy's default linear interpolation
     times = [res.time
-             for row in BatchedFleet("homogeneous", "two-stage",
+             for row in BatchedFleet(scenario_spec("homogeneous"), "two-stage",
                                      [1000 * i for i in range(8)]).run(3)
              for res in row]
     assert s.p95_time == pytest.approx(np.percentile(times, 95), rel=1e-12)
@@ -337,7 +337,7 @@ def test_large_fleet_p95_uses_linear_interpolation():
 
 
 def test_compare_schemes_forwards_engine_and_shares_seed_list():
-    out = compare_schemes("homogeneous", n_seeds=2, n_epochs=1,
+    out = compare_schemes(scenario_spec("homogeneous"), n_seeds=2, n_epochs=1,
                           engine="oracle")
     assert set(out) == set(SCHEMES)
     for scheme, summary in out.items():

@@ -1,0 +1,309 @@
+"""Declarative ExperimentSpec API: validation, serialization, wrappers.
+
+Covers the spec layer's contracts (DESIGN.md §3.6):
+
+  * override validation — unknown fields raise ``ValueError`` listing the
+    valid field set instead of being silently dropped;
+  * JSON round-trip — ``to_json``/``from_json`` reproduce every registry
+    scenario exactly, pinned by golden files so fleets are reproducible
+    from an artifact rather than a code version;
+  * deprecated wrappers — ``make_cluster``/``get_scenario``/string-keyed
+    ``run_fleet`` warn but stay bit-identical to the spec path;
+  * specs are static pytrees (zero leaves, hashable, usable as dict keys).
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.sim import (BatchedFleet, CommParams, ExperimentSpec,
+                       GilbertElliottChannel, ScenarioSpec, StaticChannel,
+                       StaticChannelSpec, TraceChannel, as_channel_spec,
+                       available_scenarios, build_cluster, compare_schemes,
+                       get_scenario, make_cluster, run_experiment,
+                       run_fleet, scenario_spec, split_comm_params)
+from repro.sim.spec import CommSpec, ComputeSpec, EnergySpec
+
+GOLDEN_DIR = Path(__file__).parent / "golden" / "scenario_specs"
+
+
+# --------------------------------------------------------------------- #
+# override validation
+# --------------------------------------------------------------------- #
+def test_unknown_override_raises_with_valid_field_list():
+    spec = scenario_spec("homogeneous")
+    with pytest.raises(ValueError, match="unknown scenario override"):
+        spec.with_overrides(noise_scal=0.3)           # the typo hazard
+    with pytest.raises(ValueError, match="grad_bytes"):
+        # the error message lists the valid fields
+        spec.with_overrides(payload=2.0)
+
+
+def test_make_cluster_rejects_unknown_override():
+    with pytest.deprecated_call():
+        with pytest.raises(ValueError, match="unknown scenario override"):
+            make_cluster("homogeneous", scheme="two-stage", seed=0,
+                         straggler_probability=0.5)
+
+
+def test_overrides_route_to_owning_subspec():
+    spec = scenario_spec("homogeneous").with_overrides(
+        noise_scale=0.3, grad_bytes=16.0, tx_power=2.0, M1=5)
+    assert spec.compute.noise_scale == 0.3
+    assert spec.compute.M1 == 5
+    assert spec.comm.grad_bytes == 16.0
+    assert spec.energy.tx_power == 2.0
+    # untouched fields survive
+    assert spec.channel == scenario_spec("homogeneous").channel
+    assert spec.comm.slot_T == 0.1
+
+
+def test_comm_params_override_conflicts_with_explicit_energy():
+    spec = scenario_spec("homogeneous")
+    for kwargs in ({"comm": CommParams(tx_power=3.0),
+                    "energy": EnergySpec(tx_power=9.0)},
+                   {"energy": EnergySpec(tx_power=9.0),
+                    "comm": CommParams(tx_power=3.0)}):
+        with pytest.raises(ValueError, match="conflicts"):
+            spec.with_overrides(**kwargs)        # kwarg-order-independent
+
+
+def test_gilbert_elliott_spec_rejects_rate_length_mismatch():
+    from repro.sim import GilbertElliottChannelSpec
+    with pytest.raises(ValueError, match="rate_bad has 3"):
+        GilbertElliottChannelSpec(rate_good=(5.0,) * 6,
+                                  rate_bad=(0.2, 0.3, 0.4))
+
+
+def test_comm_params_override_splits_into_comm_and_energy():
+    cp = CommParams(grad_bytes=2.0, tx_power=3.0, E0=1.0)
+    spec = scenario_spec("homogeneous").with_overrides(comm=cp)
+    assert spec.comm.grad_bytes == 2.0
+    assert spec.energy.tx_power == 3.0 and spec.energy.E0 == 1.0
+    comm, energy = split_comm_params(cp)
+    assert (spec.comm, spec.energy) == (comm, energy)
+
+
+def test_channel_override_accepts_live_model():
+    ch = GilbertElliottChannel(rate_good=np.full(6, 5.0),
+                               rate_bad=np.full(6, 0.5), p_gb=0.2)
+    spec = scenario_spec("homogeneous").with_overrides(channel=ch)
+    built = spec.channel.build()
+    assert built.physics_key() == ch.physics_key()
+
+
+def test_as_channel_spec_roundtrips_all_three_models():
+    for name in ("homogeneous", "fading-uplink", "flash-crowd"):
+        spec = scenario_spec(name)
+        model = spec.channel.build()
+        assert as_channel_spec(model) == spec.channel
+        assert as_channel_spec(model).build().physics_key() \
+            == model.physics_key()
+
+
+def test_grad_bytes_tuple_builds_per_worker_array():
+    spec = scenario_spec("homogeneous").with_overrides(
+        grad_bytes=(1.0, 1.0, 2.0, 2.0, 3.0, 3.0))
+    cluster = build_cluster(spec, "two-stage", 0)
+    np.testing.assert_array_equal(cluster.grad_bytes,
+                                  [1.0, 1.0, 2.0, 2.0, 3.0, 3.0])
+
+
+def test_experiment_spec_validation_and_seed_list():
+    spec = scenario_spec("homogeneous")
+    exp = ExperimentSpec(scenario=spec, scheme="cyclic", n_seeds=3,
+                         base_seed=5)
+    assert exp.seeds == (5, 1005, 2005)
+    with pytest.raises(ValueError, match="scheme"):
+        ExperimentSpec(scenario=spec, scheme="warp-drive")
+    with pytest.raises(ValueError, match="n_seeds"):
+        ExperimentSpec(scenario=spec, n_seeds=0)
+
+
+def test_build_cluster_requires_a_spec():
+    with pytest.raises(TypeError, match="ScenarioSpec"):
+        build_cluster("homogeneous")
+
+
+def test_with_overrides_validates_final_state_not_intermediates():
+    # a consistent resize (M plus matching channel and rates) is one
+    # legal override set, regardless of application order
+    spec = scenario_spec("homogeneous").with_overrides(
+        M=8, K=8, channel=StaticChannelSpec(rates=(4.0,) * 8),
+        rates=(4.0,) * 8)
+    assert spec.M == 8 and spec.channel.n_workers == 8
+    assert build_cluster(spec, "two-stage", 0).M == 8
+
+
+def test_subspec_fields_are_type_checked():
+    spec = scenario_spec("homogeneous")
+    with pytest.raises(TypeError, match="energy= wants a EnergySpec"):
+        spec.with_overrides(energy=CommParams())
+    with pytest.raises(TypeError, match="comm= wants a CommSpec"):
+        ScenarioSpec(name="x", comm=object())
+    with pytest.raises(TypeError, match="channel= wants a ChannelSpec"):
+        ScenarioSpec(name="x", channel=StaticChannel(np.full(6, 1.0)))
+
+
+def test_experiment_spec_rejects_string_scenario():
+    with pytest.raises(TypeError, match="scenario_spec"):
+        ExperimentSpec(scenario="homogeneous")
+
+
+def test_shape_mismatches_raise_at_spec_construction():
+    # channel width and compute rates are checked where the spec is
+    # built, not deep inside a later build_cluster call
+    with pytest.raises(ValueError, match="channel spec covers 6 workers"):
+        scenario_spec("homogeneous").with_overrides(M=4)
+    with pytest.raises(ValueError, match="compute.rates has 6"):
+        ScenarioSpec(name="x", M=4, K=4,
+                     compute=scenario_spec("homogeneous").compute)
+    # a default channel follows M
+    small = ScenarioSpec(name="small", M=4, K=4)
+    assert small.channel.n_workers == 4
+    cluster = build_cluster(small, "two-stage", 0)
+    assert cluster.M == 4 and cluster.channel.M == 4
+
+
+# --------------------------------------------------------------------- #
+# serialization: golden files per registry scenario
+# --------------------------------------------------------------------- #
+def test_every_registry_scenario_has_a_golden_file():
+    assert {p.stem for p in GOLDEN_DIR.glob("*.json")} \
+        == set(available_scenarios())
+
+
+@pytest.mark.parametrize("name", sorted(
+    ["homogeneous", "heterogeneous-rates", "bursty-stragglers",
+     "fading-uplink", "energy-harvesting-constrained", "flash-crowd",
+     "saturated-uplink"]))
+def test_scenario_spec_json_roundtrip_matches_golden(name):
+    spec = scenario_spec(name)
+    golden = (GOLDEN_DIR / f"{name}.json").read_text()
+    # the serialized form is pinned: a fleet is reproducible from the
+    # artifact, not from whatever the registry happens to say today
+    assert spec.to_json() + "\n" == golden
+    restored = ScenarioSpec.from_json(golden)
+    assert restored == spec
+    # and the restored spec builds identical physics
+    a = build_cluster(spec, "two-stage", 3).run_epoch(0)
+    b = build_cluster(restored, "two-stage", 3).run_epoch(0)
+    assert a.time == b.time and a.comm.n_slots == b.comm.n_slots
+
+
+def test_from_json_rejects_unknown_channel_kind():
+    d = scenario_spec("homogeneous").to_dict()
+    d["channel"] = {"kind": "quantum", "rates": [1.0]}
+    with pytest.raises(ValueError, match="channel kind"):
+        ScenarioSpec.from_dict(d)
+
+
+def test_json_preserves_nonrepresentable_floats():
+    spec = scenario_spec("homogeneous").with_overrides(grad_bytes=0.1)
+    assert ScenarioSpec.from_json(spec.to_json()) == spec
+
+
+# --------------------------------------------------------------------- #
+# specs are static pytree data
+# --------------------------------------------------------------------- #
+def test_specs_are_static_pytrees_and_hashable():
+    import jax
+    spec = scenario_spec("fading-uplink")
+    assert jax.tree_util.tree_leaves(spec) == []        # all-static node
+    exp = ExperimentSpec(scenario=spec, n_seeds=2)
+    assert jax.tree_util.tree_leaves(exp) == []
+    table = {spec: 1, scenario_spec("flash-crowd"): 2}  # hashable
+    assert table[scenario_spec("fading-uplink")] == 1
+
+
+def test_registry_is_typed_data():
+    from repro.sim import SCENARIOS
+    names = available_scenarios()
+    assert isinstance(names, list)
+    assert all(isinstance(n, str) for n in names)
+    assert all(isinstance(v, ScenarioSpec) for v in SCENARIOS.values())
+    assert all(k == v.name for k, v in SCENARIOS.items())
+
+
+# --------------------------------------------------------------------- #
+# deprecated wrappers stay bit-identical to the spec path
+# --------------------------------------------------------------------- #
+def test_make_cluster_wrapper_is_bit_identical_to_spec_path():
+    spec = scenario_spec("fading-uplink").with_overrides(
+        comm=CommParams(grad_bytes=0.1))
+    a = build_cluster(spec, "two-stage", 11).run_epoch(0)
+    with pytest.deprecated_call():
+        cluster = make_cluster("fading-uplink", scheme="two-stage",
+                               seed=11, comm=CommParams(grad_bytes=0.1))
+    b = cluster.run_epoch(0)
+    assert a.time == b.time
+    assert a.comm.n_slots == b.comm.n_slots
+    assert a.decode_ok == b.decode_ok
+    np.testing.assert_array_equal(a.comm.arrived, b.comm.arrived)
+    np.testing.assert_array_equal(a.comm.bytes_transmitted,
+                                  b.comm.bytes_transmitted)
+    np.testing.assert_array_equal(a.weights, b.weights)
+
+
+def test_string_keyed_run_fleet_wrapper_is_bit_identical():
+    kw = dict(n_seeds=2, n_epochs=2, base_seed=3)
+    a = run_fleet(scenario_spec("homogeneous"), "two-stage", **kw)
+    with pytest.deprecated_call():
+        b = run_fleet("homogeneous", "two-stage", **kw)
+    assert a == b                     # dataclass == ⟹ bitwise-equal floats
+
+
+def test_get_scenario_is_deprecated_alias():
+    with pytest.deprecated_call():
+        spec = get_scenario("homogeneous")
+    assert spec == scenario_spec("homogeneous")
+
+
+def test_batched_fleet_accepts_spec_without_warning():
+    import warnings
+    spec = scenario_spec("homogeneous")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        fleet = BatchedFleet(spec, "two-stage", [0, 1])
+        run_fleet(spec, "two-stage", n_seeds=1, n_epochs=1)
+        compare_schemes(spec, schemes=["uncoded"], n_seeds=1, n_epochs=1)
+    assert fleet.n_seeds == 2
+
+
+def test_run_experiment_matches_run_fleet():
+    exp = ExperimentSpec(scenario=scenario_spec("homogeneous"),
+                         scheme="fractional", n_seeds=2, n_epochs=2,
+                         base_seed=7)
+    a = run_experiment(exp)
+    b = run_fleet(exp.scenario, "fractional", n_seeds=2, n_epochs=2,
+                  base_seed=7)
+    assert a == b
+
+
+# --------------------------------------------------------------------- #
+# trainer integration
+# --------------------------------------------------------------------- #
+def test_fel_trainer_accepts_scenario_spec():
+    import jax
+    from repro.core.fel import FELTrainer
+    from repro.data.pipeline import SyntheticClassificationDataset
+    from repro.models.mlp import init_mlp, per_slot_mlp_loss
+    from repro.optim import sgd_momentum
+
+    def trainer(cluster):
+        ds = SyntheticClassificationDataset(6, examples_per_partition=8,
+                                            dim=16, n_classes=4, seed=7)
+        params = init_mlp(jax.random.PRNGKey(0), dims=(16, 16, 4))
+        return FELTrainer("two-stage", 6, 6, ds, per_slot_mlp_loss,
+                          sgd_momentum(lr=0.05), params, seed=4,
+                          cluster=cluster)
+
+    spec = scenario_spec("heterogeneous-rates")
+    a = trainer(spec).run_epoch(0)
+    b = trainer(build_cluster(spec, "two-stage", 4)).run_epoch(0)
+    assert a.time == b.time and a.loss == b.loss
+
+    with pytest.raises(TypeError, match="ScenarioSpec"):
+        trainer("heterogeneous-rates")

@@ -1,0 +1,125 @@
+"""Grid sweeps: compile-sharing groups, bit-identical per-cell rows.
+
+The acceptance contract (DESIGN.md §3.6): ``sweep()`` over compatible
+scenarios × all four schemes × a seed fleet produces ``FleetSummary``
+rows bit-identical to per-cell ``run_fleet(engine="batched")``, while
+tracing/compiling the scan body at most once per compatibility group —
+asserted via the ``scan_trace_count`` probe.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import (ExperimentSpec, compat_key, plan_groups,
+                       reset_scan_compile_cache, run_experiment, run_fleet,
+                       scan_trace_count, scenario_spec, sweep)
+from repro.sim.cluster import SCHEMES
+
+#: Two registry scenarios with identical channel/comm/energy physics but
+#: different compute heterogeneity — the canonical compatible pair.
+COMPATIBLE = ("homogeneous", "bursty-stragglers")
+
+
+def _grid(n_seeds=8, n_epochs=2, schemes=SCHEMES):
+    return [ExperimentSpec(scenario=scenario_spec(name), scheme=scheme,
+                           n_seeds=n_seeds, n_epochs=n_epochs)
+            for name in COMPATIBLE for scheme in schemes]
+
+
+# --------------------------------------------------------------------- #
+# grouping
+# --------------------------------------------------------------------- #
+def test_compatible_scenarios_share_a_group_per_scheme():
+    grid = _grid(n_seeds=2)
+    groups = plan_groups(grid)
+    # one group per scheme, each holding both scenarios' cells
+    assert len(groups) == len(SCHEMES)
+    assert all(len(g) == len(COMPATIBLE) for g in groups)
+    a, b = (scenario_spec(n) for n in COMPATIBLE)
+    assert compat_key(grid[0]) == compat_key(grid[len(SCHEMES)])
+    assert a.channel == b.channel and a.comm == b.comm
+
+
+def test_incompatible_physics_lands_in_separate_groups():
+    cells = [ExperimentSpec(scenario=scenario_spec(n), n_seeds=2)
+             for n in ("homogeneous", "saturated-uplink", "fading-uplink")]
+    groups = plan_groups(cells)
+    assert len(groups) == 3           # payload and channel physics differ
+    with pytest.raises(TypeError, match="ExperimentSpec"):
+        plan_groups([cells[0], "homogeneous"])
+    # both engines reject an invalid grid the same way
+    with pytest.raises(TypeError, match="ExperimentSpec"):
+        sweep([cells[0], "homogeneous"], engine="oracle")
+
+
+def test_sweep_preserves_grid_order():
+    grid = _grid(n_seeds=2, n_epochs=1)
+    rows = sweep(grid)
+    assert [(r.scenario, r.scheme) for r in rows] \
+        == [(c.scenario.name, c.scheme) for c in grid]
+
+
+# --------------------------------------------------------------------- #
+# the acceptance criterion: bit-identity + one compile per group
+# --------------------------------------------------------------------- #
+def test_sweep_rows_bit_identical_to_per_cell_fleets_one_compile():
+    """2 compatible scenarios × 4 schemes × 8 seeds: grouped sweep rows
+    equal per-cell ``run_fleet(engine="batched")`` exactly (dataclass
+    ``==`` over float fields ⟹ bitwise), and the slot scan is traced at
+    most once per compatibility group — here exactly once overall, since
+    all four groups share one fleet shape and channel kind."""
+    grid = _grid(n_seeds=8, n_epochs=2)
+    per_cell = [run_experiment(c, engine="batched") for c in grid]
+
+    reset_scan_compile_cache()
+    before = scan_trace_count()
+    rows = sweep(grid)
+    traces = scan_trace_count() - before
+
+    assert rows == per_cell
+    n_groups = len(plan_groups(grid))
+    assert n_groups == 4
+    assert 0 < traces <= n_groups
+    assert traces == 1        # groups of equal (S, M) shape share a trace
+
+
+def test_sweep_cells_with_fewer_epochs_keep_bit_identical_prefix():
+    """A group may mix epoch counts: the shorter cell's rows must still
+    equal its standalone fleet (extra epochs only advance private RNG)."""
+    short = ExperimentSpec(scenario=scenario_spec("homogeneous"),
+                           scheme="two-stage", n_seeds=3, n_epochs=1)
+    long = ExperimentSpec(scenario=scenario_spec("bursty-stragglers"),
+                          scheme="two-stage", n_seeds=3, n_epochs=3)
+    assert len(plan_groups([short, long])) == 1
+    rows = sweep([short, long])
+    assert rows[0] == run_experiment(short)
+    assert rows[1] == run_experiment(long)
+
+
+def test_sweep_oracle_engine_agrees_with_batched():
+    grid = _grid(n_seeds=2, n_epochs=1, schemes=("two-stage",))
+    a = sweep(grid)
+    b = sweep(grid, engine="oracle")
+    for ra, rb in zip(a, b):
+        for f in ("mean_time", "mean_comm_time", "mean_slots",
+                  "decode_failure_rate"):
+            assert getattr(ra, f) == pytest.approx(getattr(rb, f),
+                                                   rel=1e-9), f
+
+
+def test_sweep_over_override_axis_groups_by_physics():
+    """A sweep along a physics axis (payload size) cannot share fleets —
+    one group per grad_bytes value — but still runs and summarizes, with
+    ``name=`` relabeling keeping the rows distinguishable."""
+    base = scenario_spec("homogeneous")
+    grid = [ExperimentSpec(
+                scenario=base.with_overrides(name=f"homogeneous-gb{gb}",
+                                             grad_bytes=gb),
+                n_seeds=2, n_epochs=1)
+            for gb in (0.5, 1.0, 2.0)]
+    assert len(plan_groups(grid)) == 3
+    rows = sweep(grid)
+    assert [r.scenario for r in rows] \
+        == ["homogeneous-gb0.5", "homogeneous-gb1.0", "homogeneous-gb2.0"]
+    assert all(np.isfinite(r.mean_time) and r.mean_time > 0 for r in rows)
+    # heavier payloads take more slots to drain
+    assert rows[0].mean_slots <= rows[2].mean_slots
