@@ -1,0 +1,178 @@
+"""Benchmark-regression gate: fail CI when throughput drops vs baseline.
+
+Compares the JSON artifacts the benchmark jobs already produce
+(``BENCH_fleet.json`` from ``benchmarks.fleet_scale``, ``BENCH_grid.json``
+from ``benchmarks.grid_sweep``) against committed baselines under
+``benchmarks/baselines/`` and exits non-zero when any throughput metric
+fell more than ``--tolerance`` (default 30%) below its baseline — so CI
+*gates* on the perf numbers it used to merely upload.
+
+Gated metrics (higher is better):
+
+  * ``fleet.<scenario>.batched.seed_epochs_per_sec`` and the
+    machine-robust ``fleet.<scenario>.speedup`` (batched / oracle);
+  * ``grid.grouped.cells_per_sec``, ``grid.per_cell.cells_per_sec`` and
+    ``grid.speedup`` (grouped / per-cell).
+
+Metrics present in the current run but absent from the baseline (a new
+scenario) are reported informationally and do not fail; metrics in the
+baseline but missing from the run fail, so a silently dropped benchmark
+row cannot hide a regression.
+
+    PYTHONPATH=src python -m benchmarks.check_regression            # gate
+    PYTHONPATH=src python -m benchmarks.check_regression --update   # refresh
+
+``--update`` rewrites the baselines from the current artifacts (run it on
+the reference machine — committed baselines are derated snapshots, see the
+``note`` field inside each baseline file).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_TOLERANCE = 0.30
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+
+# --------------------------------------------------------------------- #
+# metric extraction (schema-tolerant: missing sections yield no metrics)
+# --------------------------------------------------------------------- #
+def fleet_metrics(data: dict) -> dict:
+    """Flat ``{metric: value}`` throughput view of a BENCH_fleet.json."""
+    out = {}
+    for name, row in data.get("scenarios", {}).items():
+        batched = row.get("batched")
+        if isinstance(batched, dict) and "seed_epochs_per_sec" in batched:
+            out[f"fleet.{name}.batched.seed_epochs_per_sec"] = \
+                float(batched["seed_epochs_per_sec"])
+        if "speedup" in row:
+            out[f"fleet.{name}.speedup"] = float(row["speedup"])
+    return out
+
+
+def grid_metrics(data: dict) -> dict:
+    """Flat ``{metric: value}`` throughput view of a BENCH_grid.json."""
+    out = {}
+    for key in ("grouped", "per_cell"):
+        section = data.get(key)
+        if isinstance(section, dict) and "cells_per_sec" in section:
+            out[f"grid.{key}.cells_per_sec"] = \
+                float(section["cells_per_sec"])
+    if "speedup" in data:
+        out["grid.speedup"] = float(data["speedup"])
+    return out
+
+
+def compare(current: dict, baseline: dict, tolerance: float):
+    """``(failures, missing, new)`` of current vs baseline metrics.
+
+    A metric fails when ``current < baseline * (1 - tolerance)``; a
+    baseline metric absent from the current run is ``missing`` (also a
+    gate failure); a current metric with no baseline is ``new``
+    (informational only).
+    """
+    failures, missing = [], []
+    for key, base in sorted(baseline.items()):
+        cur = current.get(key)
+        if cur is None:
+            missing.append(key)
+            continue
+        floor = base * (1.0 - tolerance)
+        if cur < floor:
+            failures.append((key, cur, base, floor))
+    new = sorted(set(current) - set(baseline))
+    return failures, missing, new
+
+
+# --------------------------------------------------------------------- #
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_pair(bench_path: str, baseline_path: str, extract,
+               tolerance: float) -> bool:
+    """Gate one artifact against one baseline file; True iff it passes."""
+    label = os.path.basename(bench_path)
+    current = extract(_load(bench_path))
+    baseline = _load(baseline_path).get("metrics", {})
+    failures, missing, new = compare(current, baseline, tolerance)
+    for key, cur, base, floor in failures:
+        print(f"FAIL {key}: {cur:.2f} < floor {floor:.2f} "
+              f"(baseline {base:.2f}, tolerance -{100 * tolerance:.0f}%)")
+    for key in missing:
+        print(f"FAIL {key}: present in baseline but missing from {label}")
+    for key in new:
+        print(f"note {key}: no baseline yet "
+              f"(current {current[key]:.2f}); add via --update")
+    n_ok = len(baseline) - len(failures) - len(missing)
+    print(f"{label}: {n_ok}/{len(baseline)} baseline metrics within "
+          f"-{100 * tolerance:.0f}% tolerance")
+    return not failures and not missing
+
+
+def update_baseline(bench_path: str, baseline_path: str, extract,
+                    note: str) -> None:
+    metrics = extract(_load(bench_path))
+    os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
+    with open(baseline_path, "w") as f:
+        json.dump({"note": note, "metrics": metrics}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
+    print(f"wrote {baseline_path} ({len(metrics)} metrics)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fleet", default="BENCH_fleet.json",
+                    help="fleet benchmark artifact")
+    ap.add_argument("--grid", default="BENCH_grid.json",
+                    help="grid-sweep benchmark artifact")
+    ap.add_argument("--baselines", default=BASELINE_DIR,
+                    help="directory of committed baseline JSONs")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get(
+                        "BENCH_REGRESSION_TOLERANCE", DEFAULT_TOLERANCE)),
+                    help="allowed fractional drop below baseline "
+                         "(0.30 = fail below 70%% of baseline; env "
+                         "BENCH_REGRESSION_TOLERANCE overrides)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baselines from the current artifacts")
+    ap.add_argument("--note", default="refreshed via --update",
+                    help="provenance note stored with --update")
+    args = ap.parse_args(argv)
+
+    pairs = [(args.fleet, os.path.join(args.baselines, "BENCH_fleet.json"),
+              fleet_metrics),
+             (args.grid, os.path.join(args.baselines, "BENCH_grid.json"),
+              grid_metrics)]
+    # every expected artifact must exist — a benchmark job that silently
+    # stopped writing its JSON must not turn the gate into a partial no-op
+    absent = [b for b, _, _ in pairs if not os.path.exists(b)]
+    if absent:
+        for b in absent:
+            print(f"FAIL missing benchmark artifact {b}; run "
+                  f"benchmarks.fleet_scale / benchmarks.grid_sweep first")
+        return 2
+
+    if args.update:
+        for bench, baseline, extract in pairs:
+            update_baseline(bench, baseline, extract, args.note)
+        return 0
+
+    ok = True
+    for bench, baseline, extract in pairs:
+        if not os.path.exists(baseline):
+            print(f"FAIL no baseline {baseline}; bootstrap with --update")
+            ok = False
+            continue
+        ok &= check_pair(bench, baseline, extract, args.tolerance)
+    print("benchmark regression gate: " + ("PASS" if ok else "FAIL"))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

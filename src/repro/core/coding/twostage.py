@@ -105,6 +105,51 @@ class TwoStagePlanner:
                           partitions=partitions)
 
     # ------------------------------------------------------------------ #
+    def plan_stage1_batched(self, epoch: int, speeds: np.ndarray
+                            ) -> "list[Stage1Plan]":
+        """S seeds' stage-1 plans at once from an (S, M) speed stack —
+        bitwise identical to S :meth:`plan_stage1` calls.
+
+        The per-seed greedy Eq.-16 split (``allocate_supports`` with
+        ``s = 0``) is re-expressed as K vectorized argmax steps over the
+        whole stack: ``np.lexsort((arange, -remaining))[0]`` is exactly
+        "first index attaining the max", which is ``np.argmax`` row-wise.
+        """
+        speeds = np.asarray(speeds, np.float64)
+        S = speeds.shape[0]
+        M1, K = self.M1, self.K
+        if self.select == "fastest":
+            workers = np.stack([
+                np.sort(np.argsort(-speeds[i])[:M1]) for i in range(S)])
+        else:
+            start = (epoch * M1) % self.M
+            w = np.sort((start + np.arange(M1)) % self.M)
+            workers = np.broadcast_to(w, (S, M1))
+        partitions = np.arange(K)
+
+        # allocate_supports(K, 0, caps), vectorized across seeds
+        caps = np.take_along_axis(speeds, workers, axis=1)
+        caps = caps / np.maximum(caps.sum(axis=1), 1e-12)[:, None] * K
+        total = caps.sum(axis=1)
+        caps = np.where((total <= 0)[:, None], np.ones((S, M1)), caps)
+        total = np.where(total <= 0, float(M1), total)
+        need = float(K)
+        caps = np.where((total < need)[:, None],
+                        caps * (need / total)[:, None], caps)
+        remaining = caps.astype(np.float64)
+        rows = np.arange(S)
+        B = np.zeros((S, M1, K))
+        for k in range(K):
+            m = np.argmax(remaining, axis=1)    # ties → lowest index
+            B[rows, m, k] = 1.0
+            remaining[rows, m] -= 1.0
+
+        return [Stage1Plan(
+            scheme=CodingScheme(B=B[i], s=0, kind="uncoded",
+                                workers=workers[i], partitions=partitions),
+            workers=workers[i], partitions=partitions) for i in range(S)]
+
+    # ------------------------------------------------------------------ #
     def plan_stage2(self, stage1: Stage1Plan, finished_mask: np.ndarray,
                     s: int, speeds: np.ndarray) -> Stage2Plan:
         """Build the stage-2 code from the observed stage-1 completions.

@@ -34,10 +34,11 @@ from repro.core.coding import (CodingScheme, StragglerPredictor,
                                TwoStagePlanner, decode_weights)
 from repro.core.coded_step import SlotPlan, build_slot_plan, slot_weights
 
-__all__ = ["CompletionTimeModel", "ComputePhase", "EpochResult",
-           "TwoStageRuntime", "build_epoch_backend",
-           "simulate_epoch_single_stage", "single_stage_accounting",
-           "twostage_slot_bound"]
+__all__ = ["CompletionDraws", "CompletionTimeModel", "ComputePhase",
+           "EpochResult", "TwoStageRuntime", "build_epoch_backend",
+           "sample_batched", "simulate_epoch_single_stage",
+           "single_stage_accounting", "stage1_accounting",
+           "stage1_deadline", "twostage_slot_bound"]
 
 
 @dataclasses.dataclass
@@ -47,6 +48,14 @@ class CompletionTimeModel:
     ``straggler_prob`` injects the paper's 1–2 stragglers/epoch (a worker is
     slowed by ``straggler_slow``×); ``fault_prob`` models workers that never
     return (node failure).
+
+    Sampling is split into a randomness tape (:meth:`draw`, RNG consumption
+    only) and a pure core (:meth:`sample_np`, arithmetic only) so the
+    batched compute engine (``repro.sim.batched_compute``) can draw each
+    seed's tape from that seed's own RNG stream — in exactly the order and
+    sizes the event-driven oracle draws — and then evaluate the arithmetic
+    vectorized across the fleet.  ``sample`` composes the two and is the
+    legacy API; its RNG consumption is unchanged.
     """
     rates: np.ndarray                 # (M,) tasks per unit time
     noise_scale: float = 0.2
@@ -54,20 +63,121 @@ class CompletionTimeModel:
     straggler_prob: float = 0.0
     straggler_slow: float = 8.0
 
-    def sample(self, worker_ids: np.ndarray, n_tasks: np.ndarray,
-               rng: np.random.Generator) -> np.ndarray:
+    def draw(self, n: int, rng: np.random.Generator) -> "CompletionDraws":
+        """Draw one sampling tape for ``n`` workers (RNG consumption only).
+
+        Order and sizes match what :meth:`sample` has always consumed:
+        exponential noise, then straggler uniforms iff straggler_prob > 0,
+        then fault uniforms iff fault_prob > 0 — both conditions are static
+        scenario physics, so consumption is deterministic per call.
+        """
+        noise = rng.exponential(self.noise_scale, size=n)
+        u_straggle = (rng.random(n) if self.straggler_prob > 0 else None)
+        u_fault = rng.random(n) if self.fault_prob > 0 else None
+        return CompletionDraws(noise, u_straggle, u_fault)
+
+    def sample_np(self, worker_ids: np.ndarray, n_tasks: np.ndarray,
+                  draws: "CompletionDraws") -> np.ndarray:
+        """Pure completion times from a pre-drawn tape (no RNG access).
+
+        Works elementwise on any leading batch shape: stacking S seeds'
+        tapes into (S, n) arrays yields bitwise-identical rows to S
+        independent calls, because every op is elementwise IEEE float64.
+        """
         worker_ids = np.asarray(worker_ids, int)
         n_tasks = np.asarray(n_tasks, np.float64)
         base = n_tasks / self.rates[worker_ids]
-        noise = rng.exponential(self.noise_scale, size=len(worker_ids))
-        t = base * (1.0 + noise)
+        t = base * (1.0 + draws.noise)
         if self.straggler_prob > 0:
-            slow = rng.random(len(worker_ids)) < self.straggler_prob
+            slow = draws.u_straggle < self.straggler_prob
             t = np.where(slow, t * self.straggler_slow, t)
         if self.fault_prob > 0:
-            t = np.where(rng.random(len(worker_ids)) < self.fault_prob,
-                         np.inf, t)
+            t = np.where(draws.u_fault < self.fault_prob, np.inf, t)
         return t
+
+    def sample(self, worker_ids: np.ndarray, n_tasks: np.ndarray,
+               rng: np.random.Generator) -> np.ndarray:
+        worker_ids = np.asarray(worker_ids, int)
+        return self.sample_np(worker_ids, n_tasks,
+                              self.draw(len(worker_ids), rng))
+
+
+@dataclasses.dataclass
+class CompletionDraws:
+    """One :meth:`CompletionTimeModel.draw` tape: per-worker noise plus the
+    optional straggler/fault uniforms (None when that physics is off).
+    Stackable along a leading seed axis for the batched compute engine."""
+    noise: np.ndarray
+    u_straggle: Optional[np.ndarray]
+    u_fault: Optional[np.ndarray]
+
+    @staticmethod
+    def stack(draws: "list[CompletionDraws]") -> "CompletionDraws":
+        """(S,)-list of (n,) tapes → one (S, n) tape."""
+        return CompletionDraws(
+            np.stack([d.noise for d in draws]),
+            (np.stack([d.u_straggle for d in draws])
+             if draws[0].u_straggle is not None else None),
+            (np.stack([d.u_fault for d in draws])
+             if draws[0].u_fault is not None else None))
+
+
+def sample_batched(models, worker_ids: np.ndarray, n_tasks: np.ndarray,
+                   draws: CompletionDraws) -> np.ndarray:
+    """Batched twin of :meth:`CompletionTimeModel.sample_np` over a stack
+    of per-lane models: row i is bitwise the row ``models[i].sample_np``
+    would produce from ``draws`` row i.
+
+    Lanes may differ in rates / probabilities / slowdown (stacked as
+    per-lane columns), but must agree on *which* uniforms were drawn —
+    all lanes with straggler physics on, or all off (and likewise for
+    faults); the batched compute engine groups lanes accordingly.
+    """
+    worker_ids = np.asarray(worker_ids, int)
+    n_tasks = np.asarray(n_tasks, np.float64)
+    rates = np.stack([m.rates for m in models])
+    base = n_tasks / np.take_along_axis(rates, worker_ids, axis=1)
+    t = base * (1.0 + draws.noise)
+    if draws.u_straggle is not None:
+        prob = np.array([m.straggler_prob for m in models])[:, None]
+        slow_by = np.array([m.straggler_slow for m in models])[:, None]
+        t = np.where(draws.u_straggle < prob, t * slow_by, t)
+    if draws.u_fault is not None:
+        fprob = np.array([m.fault_prob for m in models])[:, None]
+        t = np.where(draws.u_fault < fprob, np.inf, t)
+    return t
+
+
+def stage1_deadline(per_task_q: np.ndarray, tasks1: np.ndarray,
+                    deadline_quantile: float) -> np.ndarray:
+    """T_comp: deadline_quantile (over selected workers) of each worker's
+    predicted finish time for its own share, with a 5% slack.  Pure; works
+    on (M1,) rows or an (S, M1) stack (quantile along the last axis is
+    bitwise identical to per-row calls)."""
+    pred_finish = per_task_q * np.maximum(tasks1, 1)
+    return np.quantile(pred_finish, deadline_quantile, axis=-1) * 1.05
+
+
+def stage1_accounting(t1: np.ndarray, tasks1: np.ndarray,
+                      finished: np.ndarray, T_comp) -> tuple:
+    """(stage1_time, total_task_time, executed) for the stage-1 window.
+
+    Pure twin of the oracle's scalar bookkeeping; accepts (M1,) rows with
+    scalar ``T_comp`` or an (S, M1) stack with (S,) deadlines.  The
+    zero-padded masked max is exact because completion times are strictly
+    positive; ``stage1_useful`` is *not* computed here — its compressed
+    sum ``t1[finished].sum()`` pairs addends differently than a padded
+    sum, so callers keep it per seed.
+    """
+    T_comp = np.asarray(T_comp, np.float64)
+    Tc = T_comp[..., None]
+    mx = np.minimum(np.max(np.where(finished, t1, 0.0), axis=-1), T_comp)
+    stage1_time = np.where(finished.all(axis=-1), mx, T_comp)
+    total = np.sum(np.minimum(t1, Tc), axis=-1)
+    # partition-copies executed by the deadline (partial work counts)
+    executed = np.sum(tasks1 * np.minimum(t1, Tc)
+                      / np.maximum(t1, 1e-12), axis=-1)
+    return stage1_time, total, executed
 
 
 def twostage_slot_bound(M: int, K: int, M1: int, s: int) -> int:
@@ -205,7 +315,13 @@ class TwoStageRuntime:
 
     # ------------------------------------------------------------------ #
     def compute_phase(self, epoch: int) -> ComputePhase:
-        """Plan + sample the compute half of the epoch (no decode yet)."""
+        """Plan + sample the compute half of the epoch (no decode yet).
+
+        The stochastic/arithmetic steps route through the pure cores
+        (``CompletionTimeModel.draw``/``sample_np``, :func:`stage1_deadline`,
+        :func:`stage1_accounting`) shared with the batched compute engine
+        (``repro.sim.batched_compute``), so the two paths cannot drift.
+        """
         M, K = self.M, self.K
         speeds = self.predictor.speeds()
         st1 = self.planner.plan_stage1(epoch, speeds)
@@ -215,9 +331,8 @@ class TwoStageRuntime:
         # per-worker-aware deadline: quantile (over selected workers) of the
         # predicted finish time of each worker's own share
         per_task_q = self.predictor.time_quantile(0.9)[st1.workers]
-        pred_finish = per_task_q * np.maximum(tasks1, 1)
-        T_comp = float(np.quantile(pred_finish, self.deadline_quantile)
-                       * 1.05)
+        T_comp = float(stage1_deadline(per_task_q, tasks1,
+                                       self.deadline_quantile))
         finished = t1 <= T_comp
 
         # predictor update with whatever we observed by the deadline
@@ -229,15 +344,10 @@ class TwoStageRuntime:
             n_active=M - int(finished.sum()), s_min=1)
         st2 = self.planner.plan_stage2(st1, finished, s_hat, speeds)
 
-        stage1_time = float(min(np.max(t1[finished], initial=0.0), T_comp)) \
-            if finished.any() else T_comp
-        if not finished.all():
-            stage1_time = T_comp
-        stage1_total = float(np.sum(np.minimum(t1, T_comp)))
+        stage1_time, stage1_total, stage1_executed = (
+            float(x) for x in stage1_accounting(t1, tasks1, finished,
+                                                T_comp))
         stage1_useful = float(np.sum(t1[finished]))
-        # partition-copies executed by the deadline (partial work counts)
-        stage1_executed = float(np.sum(tasks1 * np.minimum(t1, T_comp)
-                                       / np.maximum(t1, 1e-12)))
 
         ready = np.full(M, np.inf)
         ready[st1.workers[finished]] = t1[finished]

@@ -25,6 +25,8 @@ from .scenarios import (available_scenarios, get_scenario, make_cluster,
                         SCENARIOS)
 from .batched import (BatchedFleet, run_fleet_batched, scan_trace_count,
                       reset_scan_compile_cache)
+from .batched_compute import (batched_comm_jobs, batched_compute_phase,
+                              compute_group_key)
 from .montecarlo import (FleetSummary, compare_schemes, run_experiment,
                          run_fleet, summarize_fleet)
 from .sweep import compat_key, plan_groups, sweep
@@ -42,6 +44,7 @@ __all__ = [
     "register_scenario", "resolve_scenario", "scenario_spec",
     "BatchedFleet", "run_fleet_batched", "scan_trace_count",
     "reset_scan_compile_cache",
+    "batched_comm_jobs", "batched_compute_phase", "compute_group_key",
     "FleetSummary", "run_fleet", "run_experiment", "compare_schemes",
     "summarize_fleet",
     "compat_key", "plan_groups", "sweep",

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.lyapunov import Observation, QueueState, batched_schedule_slot
 from repro.core.runtime import EpochResult
+from repro.sim.batched_compute import batched_comm_jobs
 from repro.sim.channel import TAPE_BLOCK, CommTape
 from repro.sim.cluster import (CommJob, CommStats, EdgeCluster,
                                arrived_mask, stuck_tolerance)
@@ -339,12 +340,19 @@ class BatchedFleet:
 
     ``scenario`` is a :class:`~repro.sim.spec.ScenarioSpec` (registry
     names are accepted as a deprecated shim).
+
+    ``compute`` selects the compute-phase engine: ``"batched"`` (default)
+    vectorizes the two-stage planner/predictor/sampling across the fleet
+    (``repro.sim.batched_compute``, bit-exact vs the per-seed path);
+    ``"host"`` keeps the per-seed host loop (PR-2 behaviour, the
+    differential midpoint).  Both produce identical results and leave
+    identical per-seed RNG/predictor state.
     """
 
     def __init__(self, scenario=None,
                  scheme: str = "two-stage", seeds: Sequence[int] = (0,),
                  *, clusters: Optional[Sequence[EdgeCluster]] = None,
-                 **overrides):
+                 compute: str = "batched", **overrides):
         if clusters is None:
             if scenario is None:
                 raise ValueError("need a scenario spec or explicit clusters")
@@ -354,6 +362,10 @@ class BatchedFleet:
             raise ValueError(
                 f"overrides {sorted(overrides)} have no effect with "
                 f"explicit clusters=; apply them to the spec instead")
+        if compute not in ("batched", "host"):
+            raise ValueError(f"compute must be 'batched' or 'host', "
+                             f"got {compute!r}")
+        self.compute = compute
         clusters = list(clusters)
         if not clusters:
             raise ValueError("need at least one cluster")
@@ -385,7 +397,10 @@ class BatchedFleet:
 
     def run_epoch(self, epoch: int) -> List[EpochResult]:
         """One batched epoch → per-seed :class:`EpochResult` list."""
-        jobs = [c.comm_job(epoch) for c in self.clusters]
+        if self.compute == "batched":
+            jobs = batched_comm_jobs(self.clusters, epoch)
+        else:
+            jobs = [c.comm_job(epoch) for c in self.clusters]
         stats = _batched_comm(self.clusters, jobs)
         return [job.assemble(st) for job, st in zip(jobs, stats)]
 
@@ -396,7 +411,9 @@ class BatchedFleet:
 
 def run_fleet_batched(scenario, scheme: str = "two-stage", *,
                       seeds: Sequence[int] = (0,), n_epochs: int = 3,
+                      compute: str = "batched",
                       **overrides) -> List[List[EpochResult]]:
     """Convenience wrapper: build a fleet and run it, [epoch][seed].
     ``scenario`` is a ScenarioSpec (names accepted, deprecated)."""
-    return BatchedFleet(scenario, scheme, seeds, **overrides).run(n_epochs)
+    return BatchedFleet(scenario, scheme, seeds, compute=compute,
+                        **overrides).run(n_epochs)

@@ -1,0 +1,171 @@
+"""Batched two-stage compute phase for the vmap fleet engine (§3.7).
+
+PR 2 batched the *communication* phase (one ``lax.scan`` dispatch advances
+every seed's uplink by a chunk of slots) but left the *compute* phase — the
+TSDCFL control loop of stage-1 worker sampling, completion prediction,
+stage-2 assignment planning and the decode-requirement check — as one
+host-side Python epoch loop per seed.  On light/compute-bound scenarios
+that loop is the fleet bottleneck.  This module is its batched twin: the
+whole fleet's compute phase is evaluated at once, vectorized over the seed
+axis, bit-exactly reproducing the per-seed
+:meth:`~repro.core.runtime.TwoStageRuntime.compute_phase` oracle.
+
+Exactness contract (enforced by ``tests/test_batched_compute.py`` on every
+registry scenario × scheme × seed):
+
+  * **randomness** — each seed's sampling tape is drawn from that seed's
+    own RNG stream (``engine.rng``) in exactly the order and sizes the
+    oracle draws (:meth:`CompletionTimeModel.draw`; the same block-tape
+    idea as :class:`~repro.sim.channel.CommTape`), so after a batched
+    epoch every stream sits at the oracle's position for the comm phase
+    and the next epoch;
+  * **arithmetic** — the vectorized steps are elementwise IEEE float64
+    twins of the oracle's scalar cores (``sample_np``,
+    ``stage1_deadline``, ``stage1_accounting``, ``plan_stage1_batched``);
+    ``np.quantile`` along the seed stack's last axis is bitwise identical
+    to per-seed calls, and reductions keep the oracle's pairwise-sum
+    shapes (the one compressed sum, ``stage1_useful``, stays per seed —
+    padding it with zeros would pair addends differently);
+  * **state** — predictor updates (EWMA speeds, straggler forecast) and
+    the irregular stage-2 Vandermonde planning run through the *same*
+    per-seed objects and code paths as the oracle, so after the epoch the
+    planner/predictor state of every lane is the oracle's, and a later
+    oracle epoch on the same cluster still matches.
+
+The cores are deliberately host-side numpy float64, not ``jnp``: the
+control plane (coding matrices, decode solves, deadlines) is float64 by
+design (DESIGN.md §2), and the exactness contract against the float64
+oracle is the whole point — the same reason the comm engine pre-resolves
+Gilbert–Elliott thresholds in float64 on the host.  The device-dispatch
+path of an epoch remains the comm-phase slot scan; with this module a full
+epoch (compute + comm) costs one vectorized host pass plus one device
+dispatch per slot chunk, instead of a per-seed Python loop.
+
+Fleets whose lanes differ in compute physics (a grouped sweep stacks cells
+that share channel/comm physics but not compute physics) are partitioned
+into *compute groups* of identical shape/branch structure — same
+``(M, K, M1, select, deadline_quantile)`` and the same straggler/fault
+draw presence — and each group is vectorized; per-lane rates, noise scales
+and probabilities stack as per-lane columns inside a group.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.runtime import (CompletionDraws, ComputePhase,
+                                TwoStageRuntime, sample_batched,
+                                stage1_accounting, stage1_deadline)
+from repro.sim.cluster import CommJob, EdgeCluster
+
+__all__ = ["batched_comm_jobs", "batched_compute_phase", "compute_group_key"]
+
+
+def compute_group_key(rt: TwoStageRuntime) -> Tuple:
+    """Vectorization-compatibility signature of one lane's compute phase.
+
+    Lanes with equal keys share array shapes (``M``, ``K``, ``M1``), the
+    stage-1 selection policy, the deadline quantile (a scalar argument of
+    ``np.quantile``) and the tape *structure* (which uniform blocks
+    :meth:`CompletionTimeModel.draw` consumes).  Everything else — rates,
+    noise scale, probabilities, predictor state — varies freely per lane.
+    """
+    tm = rt.time_model
+    return (rt.M, rt.K, rt.M1, rt.planner.select, rt.deadline_quantile,
+            tm.straggler_prob > 0, tm.fault_prob > 0)
+
+
+def batched_compute_phase(runtimes: Sequence[TwoStageRuntime],
+                          epoch: int) -> List[ComputePhase]:
+    """The fleet's two-stage compute phases, one vectorized pass per
+    compute group — bit-identical to per-seed ``compute_phase`` calls."""
+    phases: List[ComputePhase] = [None] * len(runtimes)   # type: ignore
+    groups: Dict[Tuple, List[int]] = {}
+    for i, rt in enumerate(runtimes):
+        groups.setdefault(compute_group_key(rt), []).append(i)
+    for idxs in groups.values():
+        for i, ph in zip(idxs, _phase_group([runtimes[i] for i in idxs],
+                                            epoch)):
+            phases[i] = ph
+    return phases
+
+
+def _phase_group(rts: Sequence[TwoStageRuntime], epoch: int
+                 ) -> List[ComputePhase]:
+    """One compute group's phases (same shapes/branches across lanes)."""
+    r0 = rts[0]
+    S, M, M1 = len(rts), r0.M, r0.M1
+
+    # --- stage 1: plan, sample, deadline (vectorized over seeds) ------- #
+    speeds = np.stack([r.predictor.speeds() for r in rts])          # (S, M)
+    st1s = r0.planner.plan_stage1_batched(epoch, speeds)
+    workers = np.stack([p.workers for p in st1s])                   # (S, M1)
+    tasks1 = np.stack([p.scheme.copies_per_worker for p in st1s])
+    # each seed's tape comes from its own stream, in oracle draw order
+    draws = CompletionDraws.stack(
+        [r.time_model.draw(M1, r._rng) for r in rts])
+    t1 = sample_batched([r.time_model for r in rts], workers, tasks1,
+                        draws)                                      # (S, M1)
+
+    per_task_q = np.take_along_axis(
+        np.stack([r.predictor.time_quantile(0.9) for r in rts]),
+        workers, axis=1)
+    T_comp = stage1_deadline(per_task_q, tasks1, r0.deadline_quantile)
+    finished = t1 <= T_comp[:, None]
+    t_per_task = t1 / np.maximum(tasks1, 1)
+
+    stage1_time, stage1_total, stage1_executed = stage1_accounting(
+        t1, tasks1, finished, T_comp)
+
+    ready = np.full((S, M), np.inf)
+    rows, cols = np.nonzero(finished)
+    ready[rows, workers[rows, cols]] = t1[rows, cols]
+
+    # --- per-seed: predictor state, stage-2 planning + sampling -------- #
+    # These run through the oracle's own objects and code paths — the
+    # predictor EWMAs are sequential per-seed state, and stage-2 builds
+    # ragged Vandermonde codes — so state and results are the oracle's by
+    # construction, and each lane's RNG stream advances only when that
+    # lane's stage 2 actually triggered (as in the oracle).
+    out: List[ComputePhase] = []
+    for i, r in enumerate(rts):
+        obs = np.isfinite(t1[i])
+        sel = obs & finished[i]
+        r.predictor.update_times(workers[i][sel], t_per_task[i][sel])
+        s_hat = r.predictor.predict_s(
+            n_active=M - int(finished[i].sum()), s_min=1)
+        st2 = r.planner.plan_stage2(st1s[i], finished[i], s_hat, speeds[i])
+
+        s1_time = float(stage1_time[i])
+        t2 = tasks2 = None
+        if st2.triggered:
+            tasks2 = st2.scheme.copies_per_worker
+            t2 = r.time_model.sample(st2.active_workers, tasks2, r._rng)
+            ready[i][st2.active_workers] = np.where(
+                np.isfinite(t2), s1_time + t2, np.inf)
+        out.append(ComputePhase(
+            epoch=epoch, st1=st1s[i], st2=st2, t1=t1[i], tasks1=tasks1[i],
+            finished=finished[i], T_comp=float(T_comp[i]),
+            stage1_time=s1_time, t2=t2, tasks2=tasks2, ready_time=ready[i],
+            stage1_total_task_time=float(stage1_total[i]),
+            stage1_useful=float(np.sum(t1[i][finished[i]])),
+            stage1_executed=float(stage1_executed[i])))
+    return out
+
+
+def batched_comm_jobs(clusters: Sequence[EdgeCluster],
+                      epoch: int) -> List[CommJob]:
+    """One epoch's :class:`CommJob` per cluster, compute phase batched.
+
+    The two-stage control loop vectorizes through
+    :func:`batched_compute_phase`; the static single-stage baselines'
+    compute phase is one cheap sampling call per seed, so those lanes
+    delegate to ``EdgeCluster.comm_job`` unchanged.  Either way the job —
+    ready times, decode gate, result assembly — is built by the cluster's
+    own ``job_from_*`` methods, shared with the event-driven engine.
+    """
+    if clusters[0].scheme != "two-stage":
+        return [c.comm_job(epoch) for c in clusters]
+    phases = batched_compute_phase([c.runtime for c in clusters], epoch)
+    return [c.job_from_phase(ph) for c, ph in zip(clusters, phases)]

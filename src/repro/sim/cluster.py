@@ -31,6 +31,7 @@ epoch bit-for-bit from the same seed (DESIGN.md §3.5).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
 import jax
@@ -52,6 +53,30 @@ __all__ = ["CommJob", "CommParams", "CommStats", "EdgeCluster",
 SCHEMES = ("two-stage", "cyclic", "fractional", "uncoded")
 
 _SLOT_STEP = jax.jit(schedule_slot)
+
+
+@functools.lru_cache(maxsize=256)
+def _shared_jnp_consts(M, slot_T, tx_power, delta, xi, f_max, F, E_cap, V,
+                       n_subchannels):
+    """``(SystemParams, L, zeros)`` per distinct uplink physics.
+
+    Every cluster in a 64-seed fleet shares identical CommParams; caching
+    the immutable jnp constants turns 64 × 8 tiny device allocations into
+    one, which matters once the compute phase is batched and cluster
+    construction is a visible share of fleet wall-clock.
+    """
+    return (SystemParams(
+        T=slot_T,
+        p=jnp.full((M,), tx_power),
+        delta=jnp.full((M,), delta),
+        xi=jnp.full((M,), xi),
+        f_max=jnp.full((M,), f_max),
+        F=F,
+        E_cap=jnp.full((M,), E_cap),
+        V=V,
+        lam=jnp.ones((M,))),
+        jnp.asarray(n_subchannels, jnp.float32),
+        jnp.zeros((M,)))
 
 #: Arrival tolerance: a worker's payload counts as arrived once
 #: ``delivered >= owed·(1 − ARRIVAL_RTOL) − ARRIVAL_ATOL``.
@@ -174,18 +199,9 @@ class EdgeCluster:
         cp = self.comm
         self.grad_bytes = np.broadcast_to(
             np.asarray(cp.grad_bytes, np.float64), (M,)).copy()
-        self.sys_params = SystemParams(
-            T=cp.slot_T,
-            p=jnp.full((M,), cp.tx_power),
-            delta=jnp.full((M,), cp.delta),
-            xi=jnp.full((M,), cp.xi),
-            f_max=jnp.full((M,), cp.f_max),
-            F=cp.F,
-            E_cap=jnp.full((M,), cp.E_cap),
-            V=cp.V,
-            lam=jnp.ones((M,)))
-        self._L = jnp.asarray(cp.n_subchannels, jnp.float32)
-        self._zeros = jnp.zeros((M,))
+        self.sys_params, self._L, self._zeros = _shared_jnp_consts(
+            M, cp.slot_T, cp.tx_power, cp.delta, cp.xi, cp.f_max, cp.F,
+            cp.E_cap, cp.V, cp.n_subchannels)
 
     def _slot_fn(self, state, obs):
         # SystemParams is a registered pytree, so this shares one compiled
@@ -198,41 +214,51 @@ class EdgeCluster:
 
         Consumes this epoch's compute-phase randomness; the returned job
         must then be driven through exactly one comm phase (event-driven
-        or batched) so the per-seed RNG stream stays aligned.
+        or batched) so the per-seed RNG stream stays aligned.  The batched
+        compute engine (``repro.sim.batched_compute``) samples the phase
+        for a whole fleet at once and hands each seed's outcome to the
+        same :meth:`job_from_phase`/:meth:`job_from_static` builders, so
+        the decode gate and assembly logic cannot drift between engines.
         """
         if self.scheme == "two-stage":
-            ph = self.runtime.compute_phase(epoch)
-            must, w2, need2 = self.runtime.decode_requirements(ph)
+            return self.job_from_phase(self.runtime.compute_phase(epoch))
+        t = self.engine.sample_completion(
+            self.time_model, np.arange(self.M),
+            self.static_scheme.copies_per_worker)
+        return self.job_from_static(t)
 
-            def decodable(arrived: np.ndarray) -> bool:
-                if len(must) == 0 and need2 == 0:
-                    return False  # nothing ever computed
-                if not arrived[must].all():
+    def job_from_phase(self, ph) -> CommJob:
+        """Comm job for a sampled two-stage :class:`ComputePhase`."""
+        must, w2, need2 = self.runtime.decode_requirements(ph)
+
+        def decodable(arrived: np.ndarray) -> bool:
+            if len(must) == 0 and need2 == 0:
+                return False  # nothing ever computed
+            if not arrived[must].all():
+                return False
+            if need2:
+                if int(arrived[w2].sum()) < need2:
                     return False
-                if need2:
-                    if int(arrived[w2].sum()) < need2:
-                        return False
-                    try:  # the count gate is necessary, not sufficient
-                        decode_weights(ph.st2.scheme, arrived[w2])
-                    except ValueError:
-                        return False
-                return True
+                try:  # the count gate is necessary, not sufficient
+                    decode_weights(ph.st2.scheme, arrived[w2])
+                except ValueError:
+                    return False
+            return True
 
-            def assemble(stats: CommStats) -> EpochResult:
-                # decodability is monotone in arrivals and gated per slot,
-                # so a forced stop implies result_from_phase's own decode
-                # fails (or a finisher is missing) — decode_ok needs no
-                # override here.
-                return self.runtime.result_from_phase(
-                    ph, stats.arrived, stats.decode_time, comm=stats)
+        def assemble(stats: CommStats) -> EpochResult:
+            # decodability is monotone in arrivals and gated per slot,
+            # so a forced stop implies result_from_phase's own decode
+            # fails (or a finisher is missing) — decode_ok needs no
+            # override here.
+            return self.runtime.result_from_phase(
+                ph, stats.arrived, stats.decode_time, comm=stats)
 
-            return CommJob(ph.ready_time, decodable, assemble)
+        return CommJob(ph.ready_time, decodable, assemble)
 
-        # --- static single-stage baselines ----------------------------- #
+    def job_from_static(self, t: np.ndarray) -> CommJob:
+        """Comm job for sampled single-stage completion times ``t``."""
         scheme = self.static_scheme
         tasks = scheme.copies_per_worker
-        t = self.engine.sample_completion(self.time_model,
-                                          np.arange(self.M), tasks)
 
         def decodable(arrived: np.ndarray) -> bool:
             # no count precheck: FRS can decode with fewer than M - s

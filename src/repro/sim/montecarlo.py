@@ -30,7 +30,12 @@ from repro.sim.spec import ExperimentSpec, build_cluster, fleet_seeds
 __all__ = ["FleetSummary", "run_fleet", "run_experiment",
            "compare_schemes", "ENGINES"]
 
-ENGINES = ("batched", "oracle")
+#: ``batched`` — compute and comm phases both vectorized over seeds (the
+#: default); ``hybrid`` — per-seed host compute phase + batched comm scan
+#: (PR-2 behaviour, kept as the differential midpoint); ``oracle`` — the
+#: fully event-driven per-seed reference loop.  All three draw identical
+#: per-seed randomness tapes and produce identical per-epoch results.
+ENGINES = ("batched", "hybrid", "oracle")
 
 
 @dataclasses.dataclass
@@ -104,9 +109,11 @@ def run_fleet(scenario, scheme: str = "two-stage", *,
     ``scenario`` is a :class:`~repro.sim.spec.ScenarioSpec` (registry
     names are accepted as a deprecated shim); ``**overrides`` are
     validated spec-field overrides.  ``engine="batched"`` (default)
-    advances all seeds together through the vmap fleet engine;
-    ``engine="oracle"`` runs each seed through the event-driven reference
-    loop.  Same seeds, same tapes, same results.
+    advances all seeds together through the vmap fleet engine — compute
+    *and* comm phases; ``engine="hybrid"`` batches only the comm phase
+    (per-seed host compute loop); ``engine="oracle"`` runs each seed
+    through the event-driven reference loop.  Same seeds, same tapes,
+    same results.
     """
     if n_seeds < 1 or n_epochs < 1:
         raise ValueError(f"need n_seeds >= 1 and n_epochs >= 1, got "
@@ -121,7 +128,9 @@ def run_fleet(scenario, scheme: str = "two-stage", *,
             cluster = build_cluster(spec, scheme, s)
             results.extend(cluster.run_epoch(e) for e in range(n_epochs))
     else:
-        fleet = BatchedFleet(spec, scheme, seeds)
+        fleet = BatchedFleet(spec, scheme, seeds,
+                             compute=("host" if engine == "hybrid"
+                                      else "batched"))
         per_epoch = fleet.run(n_epochs)                    # [epoch][seed]
         # seed-major order, matching the oracle loop, so both engines feed
         # the summary reductions identically (bitwise-equal summaries)

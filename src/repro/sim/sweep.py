@@ -67,19 +67,26 @@ def sweep(grid: Sequence[ExperimentSpec], *,
           engine: str = "batched") -> List[FleetSummary]:
     """Run every grid cell, one :class:`FleetSummary` per cell in input
     order.  With the default batched engine, physics-compatible cells are
-    stacked into one fleet per group; ``engine="oracle"`` runs each cell
+    stacked into one fleet per group — compute and comm phases both
+    vectorized over the stacked lanes (lanes that differ in compute
+    physics fall into separate *compute groups* inside
+    ``repro.sim.batched_compute`` but still share the one comm-scan
+    compile); ``engine="hybrid"`` stacks the same fleets with the
+    per-seed host compute loop; ``engine="oracle"`` runs each cell
     through the event-driven reference loop instead (the differential
     baseline)."""
     grid = list(grid)
     groups = plan_groups(grid)      # also validates cell types, any engine
-    if engine != "batched":
+    if engine not in ("batched", "hybrid"):
         return [run_experiment(exp, engine=engine) for exp in grid]
     rows: List[FleetSummary] = [None] * len(grid)       # type: ignore
     for idxs in groups:
         cells = [grid[i] for i in idxs]
         clusters = [build_cluster(c.scenario, c.scheme, seed)
                     for c in cells for seed in c.seeds]
-        fleet = BatchedFleet(clusters=clusters)
+        fleet = BatchedFleet(clusters=clusters,
+                             compute=("host" if engine == "hybrid"
+                                      else "batched"))
         per_epoch = fleet.run(max(c.n_epochs for c in cells))
         lane = 0
         for i, cell in zip(idxs, cells):

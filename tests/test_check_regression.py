@@ -1,0 +1,130 @@
+"""Benchmark-regression gate: an injected slowdown must trip it."""
+import copy
+import json
+
+import pytest
+
+from benchmarks.check_regression import (compare, fleet_metrics,
+                                         grid_metrics, main)
+
+FLEET = {
+    "scenarios": {
+        "homogeneous": {
+            "regime": "compute-bound", "n_seeds": 64, "n_epochs": 1,
+            "oracle": {"seconds": 1.0, "seed_epochs_per_sec": 80.0},
+            "hybrid": {"seconds": 0.3, "seed_epochs_per_sec": 300.0},
+            "batched": {"seconds": 0.1, "seed_epochs_per_sec": 600.0},
+            "speedup": 7.5, "speedup_vs_hybrid": 2.0,
+        },
+    },
+}
+GRID = {
+    "grouped": {"seconds": 1.0, "cells_per_sec": 40.0},
+    "per_cell": {"seconds": 2.0, "cells_per_sec": 20.0},
+    "speedup": 2.0,
+}
+
+
+def test_metric_extraction():
+    fm = fleet_metrics(FLEET)
+    assert fm["fleet.homogeneous.batched.seed_epochs_per_sec"] == 600.0
+    assert fm["fleet.homogeneous.speedup"] == 7.5
+    assert len(fm) == 2                    # oracle/hybrid rates not gated
+    gm = grid_metrics(GRID)
+    assert gm == {"grid.grouped.cells_per_sec": 40.0,
+                  "grid.per_cell.cells_per_sec": 20.0,
+                  "grid.speedup": 2.0}
+
+
+def test_compare_classifies_failures_missing_and_new():
+    base = {"a": 100.0, "b": 10.0, "gone": 5.0}
+    cur = {"a": 71.0, "b": 6.9, "fresh": 1.0}
+    failures, missing, new = compare(cur, base, tolerance=0.30)
+    assert [f[0] for f in failures] == ["b"]       # 6.9 < 10 * 0.7
+    assert missing == ["gone"]
+    assert new == ["fresh"]
+    # exactly at the floor passes
+    failures, _, _ = compare({"a": 70.0}, {"a": 100.0}, tolerance=0.30)
+    assert failures == []
+
+
+@pytest.fixture
+def bench_dir(tmp_path):
+    """Artifacts + matching baselines written via the tool's own --update."""
+    fleet = tmp_path / "BENCH_fleet.json"
+    grid = tmp_path / "BENCH_grid.json"
+    fleet.write_text(json.dumps(FLEET))
+    grid.write_text(json.dumps(GRID))
+    baselines = tmp_path / "baselines"
+    assert main(["--fleet", str(fleet), "--grid", str(grid),
+                 "--baselines", str(baselines), "--update"]) == 0
+    return tmp_path
+
+
+def _argv(tmp_path, extra=()):
+    return ["--fleet", str(tmp_path / "BENCH_fleet.json"),
+            "--grid", str(tmp_path / "BENCH_grid.json"),
+            "--baselines", str(tmp_path / "baselines"), *extra]
+
+
+def test_gate_passes_on_unchanged_run(bench_dir, capsys):
+    assert main(_argv(bench_dir)) == 0
+    assert "PASS" in capsys.readouterr().out
+
+
+def test_gate_trips_on_injected_slowdown(bench_dir, capsys):
+    slowed = copy.deepcopy(FLEET)
+    row = slowed["scenarios"]["homogeneous"]
+    row["batched"]["seed_epochs_per_sec"] *= 0.5       # synthetic -50%
+    row["speedup"] *= 0.5
+    (bench_dir / "BENCH_fleet.json").write_text(json.dumps(slowed))
+    assert main(_argv(bench_dir)) == 1
+    out = capsys.readouterr().out
+    assert "FAIL fleet.homogeneous.batched.seed_epochs_per_sec" in out
+    # -50% trips the default -30% gate but clears an -60% tolerance
+    assert main(_argv(bench_dir, ["--tolerance", "0.6"])) == 0
+
+
+def test_gate_fails_when_baseline_metric_disappears(bench_dir, capsys):
+    dropped = {"scenarios": {}}                        # benchmark row gone
+    (bench_dir / "BENCH_fleet.json").write_text(json.dumps(dropped))
+    assert main(_argv(bench_dir)) == 1
+    assert "missing" in capsys.readouterr().out
+
+
+def test_gate_reports_new_metric_without_failing(bench_dir, capsys):
+    grown = copy.deepcopy(FLEET)
+    grown["scenarios"]["saturated"] = copy.deepcopy(
+        FLEET["scenarios"]["homogeneous"])
+    (bench_dir / "BENCH_fleet.json").write_text(json.dumps(grown))
+    assert main(_argv(bench_dir)) == 0
+    assert "no baseline yet" in capsys.readouterr().out
+
+
+def test_missing_artifacts_is_a_usage_error(tmp_path):
+    assert main(["--fleet", str(tmp_path / "nope.json"),
+                 "--grid", str(tmp_path / "nope2.json"),
+                 "--baselines", str(tmp_path)]) == 2
+
+
+def test_one_missing_artifact_still_fails(bench_dir, capsys):
+    """A benchmark job that stops writing its JSON must not reduce the
+    gate to a partial no-op over the remaining artifact."""
+    (bench_dir / "BENCH_grid.json").unlink()
+    assert main(_argv(bench_dir)) == 2
+    assert "missing benchmark artifact" in capsys.readouterr().out
+
+
+def test_committed_baselines_cover_smoke_metrics():
+    """The shipped baselines must gate exactly the smoke-suite metrics,
+    so the CI gate can never silently become a no-op."""
+    import benchmarks.check_regression as cr
+    from benchmarks.fleet_scale import SMOKE
+    with open(f"{cr.BASELINE_DIR}/BENCH_fleet.json") as f:
+        fleet = json.load(f)["metrics"]
+    for name, _, _, _ in SMOKE:
+        assert f"fleet.{name}.batched.seed_epochs_per_sec" in fleet
+        assert f"fleet.{name}.speedup" in fleet
+    with open(f"{cr.BASELINE_DIR}/BENCH_grid.json") as f:
+        grid = json.load(f)["metrics"]
+    assert "grid.grouped.cells_per_sec" in grid
