@@ -66,6 +66,7 @@ def _time_engine(scenario: str, scheme: str, engine: str, n_seeds: int,
 
 
 def run_suite(rows, scheme: str = "two-stage") -> dict:
+    from repro.sim import BatchedFleet, scenario_spec
     out = {"config": {"rows": [list(r) for r in rows], "scheme": scheme,
                       "engines": list(ENGINES),
                       "platform": platform.platform(),
@@ -73,7 +74,12 @@ def run_suite(rows, scheme: str = "two-stage") -> dict:
            "scenarios": {}}
     for name, regime, n_seeds, n_epochs in rows:
         work = n_seeds * n_epochs
-        row = {"regime": regime, "n_seeds": n_seeds, "n_epochs": n_epochs}
+        row = {"regime": regime, "n_seeds": n_seeds, "n_epochs": n_epochs,
+               # the adaptive comm-scan chunk this scenario's batched
+               # fleet runs with (slots per device dispatch) — physics-
+               # deterministic, so one probe fleet reports it exactly
+               "chunk": BatchedFleet(scenario_spec(name), scheme,
+                                     [0]).chunk}
         for engine in ENGINES:
             dt = _time_engine(name, scheme, engine, n_seeds, n_epochs)
             row[engine] = {"seconds": dt, "seed_epochs_per_sec": work / dt}

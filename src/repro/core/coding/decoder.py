@@ -15,6 +15,7 @@ Fast paths:
 """
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import Optional
 
 import numpy as np
@@ -25,21 +26,10 @@ from .span import solve_decode
 __all__ = ["decode_weights", "rs_decode_weights"]
 
 
-def rs_decode_weights(nodes: np.ndarray, alive: np.ndarray, s: int) -> np.ndarray:
-    """Closed-form RS decode (paper property T2).
-
-    Builds p(x) = Π_{j ∈ dead}(x − α_j), padded with extra alive roots if
-    fewer than s workers actually straggled (keeps deg p ≤ s while zeroing
-    exactly the dead coordinates — extra zeroed alive workers are simply
-    not used).  Weights are a_m = p(α_m) / p(1); then
-    aᵀB = (D·A·B)/p(1) = p(1)·1ᵀ/p(1) = 1ᵀ.
-    """
-    nodes = np.asarray(nodes, dtype=np.float64)
-    alive = np.asarray(alive, dtype=bool)
+def _rs_decode_np(nodes: np.ndarray, alive: np.ndarray, s: int) -> np.ndarray:
+    """Uncached closed-form RS solve (see :func:`rs_decode_weights`)."""
     M = len(nodes)
     dead = np.flatnonzero(~alive)
-    if len(dead) > s:
-        raise ValueError(f"{len(dead)} stragglers exceed tolerance s={s}")
     roots = list(nodes[dead])
     if len(roots) < s:
         # pad with alive nodes: their weight becomes 0, harmless (we still
@@ -55,6 +45,45 @@ def rs_decode_weights(nodes: np.ndarray, alive: np.ndarray, s: int) -> np.ndarra
     a = p_at / p_at_1
     a[~alive] = 0.0
     return a
+
+
+@lru_cache(maxsize=4096)
+def _rs_decode_cached(nodes_b: bytes, alive_b: bytes, s: int) -> np.ndarray:
+    """Memoized RS solve keyed on the exact ``(nodes, alive, s)`` bytes.
+
+    The decode gate of the co-simulated uplink re-evaluates the same
+    straggler pattern every time an arrival flips a mask bit, and a
+    batched fleet evaluates the same handful of patterns across hundreds
+    of lanes per epoch — so the solve cache hit rate is high.  The cached
+    array is frozen (``writeable=False``); callers get a copy so a
+    mutated result can never corrupt later hits.
+    """
+    a = _rs_decode_np(np.frombuffer(nodes_b, np.float64),
+                      np.frombuffer(alive_b, np.bool_), s)
+    a.setflags(write=False)
+    return a
+
+
+def rs_decode_weights(nodes: np.ndarray, alive: np.ndarray, s: int) -> np.ndarray:
+    """Closed-form RS decode (paper property T2), LRU-cached per pattern.
+
+    Builds p(x) = Π_{j ∈ dead}(x − α_j), padded with extra alive roots if
+    fewer than s workers actually straggled (keeps deg p ≤ s while zeroing
+    exactly the dead coordinates — extra zeroed alive workers are simply
+    not used).  Weights are a_m = p(α_m) / p(1); then
+    aᵀB = (D·A·B)/p(1) = p(1)·1ᵀ/p(1) = 1ᵀ.
+
+    Results are memoized on ``(nodes, alive, s)`` value bytes; the
+    returned array is always a fresh writable copy (no aliasing of the
+    cache — mutating a result does not change future calls).
+    """
+    nodes = np.ascontiguousarray(nodes, dtype=np.float64)
+    alive = np.ascontiguousarray(alive, dtype=bool)
+    n_dead = int((~alive).sum())
+    if n_dead > s:
+        raise ValueError(f"{n_dead} stragglers exceed tolerance s={s}")
+    return _rs_decode_cached(nodes.tobytes(), alive.tobytes(),
+                             int(s)).copy()
 
 
 def _frs_decode(scheme: CodingScheme, alive: np.ndarray) -> Optional[np.ndarray]:

@@ -12,7 +12,7 @@ coefficients adapt as worker behaviour drifts — the "dynamic" in TSDCFL.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -66,6 +66,76 @@ class StragglerPredictor:
                 d = t - self._t.mean[w]
                 self._t.mean[w] += a * d
                 self._t.var[w] = (1 - a) * (self._t.var[w] + a * d * d)
+
+    @staticmethod
+    def update_times_batched(predictors: "Sequence[StragglerPredictor]",
+                             workers: np.ndarray, times_per_task: np.ndarray,
+                             mask: Optional[np.ndarray] = None) -> None:
+        """One EWMA update for a whole seed stack — bit-exact vs S
+        sequential :meth:`update_times` calls.
+
+        Args:
+          predictors: S per-seed predictors (equal ``M``; ``alpha`` may
+            vary per lane).
+          workers: (S, n) worker ids — **unique within each row** (one
+            observation per worker per call, which is what every epoch
+            code path produces; with duplicates the sequential oracle
+            would chain EWMA steps that a scatter cannot express).
+          times_per_task: (S, n) observed per-task times.
+          mask: optional (S, n) bool — rows of observations to keep.
+
+        The per-worker update is a single EWMA step, so with unique
+        workers the sequential loop order is irrelevant and the masked
+        (S, M)-scatter form below is an elementwise IEEE float64 twin of
+        the oracle's scalar arithmetic.
+        """
+        S = len(predictors)
+        if S == 0:
+            return
+        M = predictors[0].M
+        workers = np.asarray(workers, dtype=int)
+        x = np.asarray(times_per_task, dtype=np.float64)
+        valid = np.isfinite(x) & (x > 0)
+        if mask is not None:
+            valid &= np.asarray(mask, dtype=bool)
+        mean = np.stack([p._t.mean for p in predictors])
+        var = np.stack([p._t.var for p in predictors])
+        init = np.stack([p._t.initialized for p in predictors])
+        a = np.array([p.alpha for p in predictors])[:, None]
+
+        obs = np.full((S, M), np.nan)
+        rows, cols = np.nonzero(valid)
+        obs[rows, workers[rows, cols]] = x[rows, cols]
+        upd = ~np.isnan(obs)
+        first = upd & ~init
+        cont = upd & init
+        with np.errstate(invalid="ignore"):
+            d = obs - mean                       # NaN where unobserved
+            new_mean = np.where(first, obs,
+                                np.where(cont, mean + a * d, mean))
+            new_var = np.where(first, 0.0,
+                               np.where(cont, (1 - a) * (var + a * d * d),
+                                        var))
+        for i, p in enumerate(predictors):
+            p._t.mean[:] = new_mean[i]
+            p._t.var[:] = new_var[i]
+            p._t.initialized[:] = init[i] | upd[i]
+
+    @staticmethod
+    def predict_s_batched(predictors: "Sequence[StragglerPredictor]",
+                          n_active: np.ndarray, s_min: int = 1
+                          ) -> np.ndarray:
+        """(S,) straggler forecasts — elementwise twin of
+        :meth:`predict_s` over a predictor stack."""
+        s_mean = np.array([np.nan if p._s_mean is None else p._s_mean
+                           for p in predictors], np.float64)
+        s_var = np.array([p._s_var for p in predictors], np.float64)
+        margin = np.array([p.margin for p in predictors], np.float64)
+        n_active = np.asarray(n_active, dtype=int)
+        raw = np.ceil(s_mean + margin * np.sqrt(np.maximum(s_var, 0.0)))
+        s_hat = np.where(np.isnan(s_mean), float(s_min), raw).astype(int)
+        return np.clip(np.maximum(s_hat, s_min), 0,
+                       np.maximum(n_active - 1, 0))
 
     def update_straggler_count(self, s_observed: int) -> None:
         if self._s_mean is None:

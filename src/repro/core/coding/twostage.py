@@ -23,7 +23,7 @@ straggler pattern instead of generically.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -212,3 +212,142 @@ class TwoStagePlanner:
                           uncovered_partitions=uncovered,
                           covered_partitions=covered,
                           finished_workers=finished_workers)
+
+    # ------------------------------------------------------------------ #
+    def plan_stage2_batched(self, st1s: Sequence[Stage1Plan],
+                            finished_masks: np.ndarray,
+                            s_hats: np.ndarray,
+                            speeds: np.ndarray) -> "List[Stage2Plan]":
+        """S seeds' stage-2 plans at once — bitwise identical to S
+        :meth:`plan_stage2` calls.
+
+        Lanes are partitioned by their *ragged-shape signature*
+        ``(K_rem, s, n_active)`` — lanes with equal signatures share every
+        array shape of the stage-2 construction even though their covered
+        sets, active ids and Eq.-16 capacities differ — and each group
+        runs the expensive steps stacked:
+
+          * the greedy capacity-weighted support allocation
+            (``allocate_supports``) becomes ``K_rem`` vectorized
+            stable-argsort steps over the group (``np.argsort(-remaining,
+            kind='stable')`` is exactly ``np.lexsort((arange,
+            -remaining))``, the scalar tie rule);
+          * the per-column Vandermonde coefficient solves become one
+            stacked ``np.linalg.solve`` over ``(G·K_rem)`` little
+            ``(s+1)×(s+1)`` systems (the gufunc applies the same LAPACK
+            routine per matrix, so rows are bitwise the scalar solves);
+          * the Vandermonde powers are built with the same cumulative
+            products ``np.vander`` uses (``multiply.accumulate``), not
+            ``x**i`` — the two pair multiplications differently.
+
+        Non-triggered lanes (``K_rem == 0`` or no active workers) take
+        the scalar fast path unchanged.
+        """
+        finished_masks = np.asarray(finished_masks, dtype=bool)
+        speeds = np.asarray(speeds, dtype=np.float64)
+        S = len(st1s)
+        if finished_masks.shape != (S, self.M1):
+            raise ValueError(f"finished_masks must have shape "
+                             f"({S}, {self.M1})")
+        plans: List[Optional[Stage2Plan]] = [None] * S
+        prep: Dict[int, Tuple] = {}
+        groups: Dict[Tuple[int, int, int], List[int]] = {}
+        all_workers = np.arange(self.M)
+        for i, st1 in enumerate(st1s):
+            fm = finished_masks[i]
+            B1 = st1.scheme.B
+            covered_cols = (B1[fm] != 0).any(axis=0)
+            covered = st1.partitions[covered_cols]
+            uncovered = st1.partitions[~covered_cols]
+            finished_workers = st1.workers[fm]
+            continuing = st1.workers[~fm]
+            fresh = np.setdiff1d(all_workers, st1.workers)
+            active = np.concatenate([continuing, fresh])
+            K_rem = len(uncovered)
+            if K_rem == 0 or len(active) == 0:
+                plans[i] = Stage2Plan(scheme=None, active_workers=active,
+                                      uncovered_partitions=uncovered,
+                                      covered_partitions=covered,
+                                      finished_workers=finished_workers)
+                continue
+            s = max(int(min(s_hats[i], len(active) - 1)), 0)
+            n_cont = (B1[~fm][:, ~covered_cols] != 0).sum(axis=1)
+            prep[i] = (active, uncovered, covered, finished_workers, fresh,
+                       n_cont.astype(np.float64))
+            groups.setdefault((K_rem, s, len(active)), []).append(i)
+
+        nodes_all = default_nodes(self.M)
+        for (K_rem, s, n_act), idxs in groups.items():
+            G = len(idxs)
+            active = np.stack([prep[i][0] for i in idxs])      # (G, n_act)
+            fresh = np.stack([prep[i][4] for i in idxs])       # (G, n_fr)
+            n_cont = np.stack([prep[i][5] for i in idxs])      # (G, n_ct)
+            spd = speeds[idxs]
+
+            # Eq.-16 capacities, stacked (same elementwise order of ops
+            # as the scalar path: (copies · W) / ΣW)
+            total_copies = K_rem * (s + 1)
+            remaining_copies = np.maximum(
+                total_copies - n_cont.sum(axis=1), 0.0)
+            n_fr = fresh.shape[1]
+            if n_fr:
+                W = np.take_along_axis(spd, fresh, axis=1)
+                W_sum = W.sum(axis=1)
+                bad = W_sum <= 0
+                W = np.where(bad[:, None], 1.0, W)
+                W_sum = np.where(bad, float(n_fr), W_sum)
+                n_fresh = remaining_copies[:, None] * W / W_sum[:, None]
+                caps = np.concatenate([n_cont, n_fresh], axis=1)
+            else:
+                caps = n_cont
+
+            # allocate_supports(K_rem, s, caps), vectorized over the group
+            need = (s + 1) * K_rem
+            total = caps.sum(axis=1)
+            zero = total <= 0
+            caps = np.where(zero[:, None], 1.0, caps)
+            total = np.where(zero, float(n_act), total)
+            caps = np.where((total < need)[:, None],
+                            caps * (need / total)[:, None], caps)
+            remaining = caps.astype(np.float64, copy=True)
+            supports = np.empty((G, K_rem, s + 1), np.int64)
+            g_rows = np.arange(G)[:, None]
+            for k in range(K_rem):
+                order = np.argsort(-remaining, axis=1,
+                                   kind="stable")[:, : s + 1]
+                chosen = np.sort(order, axis=1)    # distinct ids per row
+                supports[:, k] = chosen
+                remaining[g_rows, chosen] -= 1.0
+
+            # Vandermonde powers exactly as np.vander builds them
+            nd = nodes_all[active]                             # (G, n_act)
+            V = np.empty((G, n_act, s + 1))
+            V[..., 0] = 1.0
+            if s > 0:
+                V[..., 1:] = nd[..., None]
+                np.multiply.accumulate(V[..., 1:], axis=-1,
+                                       out=V[..., 1:])
+            A = V.swapaxes(1, 2)                          # (G, s+1, n_act)
+            subs = np.take_along_axis(A[:, None, :, :],
+                                      supports[:, :, None, :],
+                                      axis=3)         # (G, K, s+1, s+1)
+            b = np.linalg.solve(
+                subs, np.broadcast_to(np.ones(s + 1)[:, None],
+                                      (G, K_rem, s + 1, 1)))[..., 0]
+            B = np.zeros((G, n_act, K_rem))
+            B[g_rows[:, :, None], supports,
+              np.arange(K_rem)[None, :, None]] = b
+
+            for g, i in enumerate(idxs):
+                active_i, uncovered_i, covered_i, finished_i, _, _ = prep[i]
+                scheme = CodingScheme(B=B[g], s=s, kind="vandermonde",
+                                      nodes=nd[g], workers=active_i,
+                                      partitions=uncovered_i)
+                plans[i] = Stage2Plan(scheme=scheme,
+                                      active_workers=active_i,
+                                      uncovered_partitions=uncovered_i,
+                                      covered_partitions=covered_i,
+                                      finished_workers=finished_i)
+        assert all(p is not None for p in plans), \
+            "plan_stage2_batched left an unplanned lane"
+        return plans

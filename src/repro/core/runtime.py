@@ -36,9 +36,9 @@ from repro.core.coded_step import SlotPlan, build_slot_plan, slot_weights
 
 __all__ = ["CompletionDraws", "CompletionTimeModel", "ComputePhase",
            "EpochResult", "TwoStageRuntime", "build_epoch_backend",
-           "sample_batched", "simulate_epoch_single_stage",
-           "single_stage_accounting", "stage1_accounting",
-           "stage1_deadline", "twostage_slot_bound"]
+           "decode_requirements_batched", "sample_batched",
+           "simulate_epoch_single_stage", "single_stage_accounting",
+           "stage1_accounting", "stage1_deadline", "twostage_slot_bound"]
 
 
 @dataclasses.dataclass
@@ -518,6 +518,37 @@ class TwoStageRuntime:
             sch = ph.st2.scheme
             return must, ph.st2.active_workers, sch.M - sch.s
         return must, np.zeros(0, int), 0
+
+
+# --------------------------------------------------------------------- #
+def decode_requirements_batched(phases: "list[ComputePhase]") -> list:
+    """The fleet's decode-arrival requirements in one vectorized pass.
+
+    Returns one ``(must_arrive, stage2_workers, n_needed2)`` triple per
+    phase, identical to per-seed :meth:`TwoStageRuntime.
+    decode_requirements` calls: the stage-1 finisher extraction
+    (``st1.workers[finished]``) runs as a single stacked ``nonzero`` +
+    split per ``M1`` shape group instead of S per-seed index calls; the
+    stage-2 entries are O(1) attribute reads.
+    """
+    reqs: list = [None] * len(phases)
+    groups: dict = {}
+    for i, ph in enumerate(phases):
+        groups.setdefault(len(ph.finished), []).append(i)
+    for idxs in groups.values():
+        workers = np.stack([phases[i].st1.workers for i in idxs])
+        fin = np.stack([phases[i].finished for i in idxs])
+        rows, cols = np.nonzero(fin)
+        musts = np.split(workers[rows, cols],
+                         np.cumsum(fin.sum(axis=1))[:-1])
+        for must, i in zip(musts, idxs):
+            ph = phases[i]
+            if ph.triggered:
+                sch = ph.st2.scheme
+                reqs[i] = (must, ph.st2.active_workers, sch.M - sch.s)
+            else:
+                reqs[i] = (must, np.zeros(0, int), 0)
+    return reqs
 
 
 # --------------------------------------------------------------------- #

@@ -23,8 +23,8 @@ from .spec import (ChannelSpec, CommSpec, ComputeSpec, EnergySpec,
 from .scenarios import (available_scenarios, get_scenario, make_cluster,
                         register_scenario, resolve_scenario, scenario_spec,
                         SCENARIOS)
-from .batched import (BatchedFleet, run_fleet_batched, scan_trace_count,
-                      reset_scan_compile_cache)
+from .batched import (BatchedFleet, pick_chunk, run_fleet_batched,
+                      scan_trace_count, reset_scan_compile_cache)
 from .batched_compute import (batched_comm_jobs, batched_compute_phase,
                               compute_group_key)
 from .montecarlo import (FleetSummary, compare_schemes, run_experiment,
@@ -42,7 +42,7 @@ __all__ = [
     "build_cluster", "split_comm_params",
     "SCENARIOS", "available_scenarios", "get_scenario", "make_cluster",
     "register_scenario", "resolve_scenario", "scenario_spec",
-    "BatchedFleet", "run_fleet_batched", "scan_trace_count",
+    "BatchedFleet", "pick_chunk", "run_fleet_batched", "scan_trace_count",
     "reset_scan_compile_cache",
     "batched_comm_jobs", "batched_compute_phase", "compute_group_key",
     "FleetSummary", "run_fleet", "run_experiment", "compare_schemes",

@@ -48,12 +48,56 @@ from repro.sim.cluster import (CommJob, CommStats, EdgeCluster,
 from repro.sim.scenarios import resolve_scenario
 from repro.sim.spec import build_cluster
 
-__all__ = ["BatchedFleet", "run_fleet_batched", "CHUNK",
-           "scan_trace_count", "reset_scan_compile_cache"]
+__all__ = ["BatchedFleet", "run_fleet_batched", "MIN_CHUNK",
+           "pick_chunk", "scan_trace_count", "reset_scan_compile_cache"]
 
-#: Slots advanced per device dispatch (== the tape block size, so scan
-#: chunk b consumes exactly tape block b).
-CHUNK = TAPE_BLOCK
+#: Smallest adaptive scan chunk.  Chunks are powers of two in
+#: [MIN_CHUNK, TAPE_BLOCK], so every chunk divides the tape block and
+#: chunk boundaries never straddle a randomness block (RNG draws are
+#: byte-identical for every legal chunk — the chunk-invariance contract
+#: of ``tests/test_chunking.py``).
+MIN_CHUNK = 32
+
+
+def pick_chunk(clusters: Sequence[EdgeCluster]) -> int:
+    """Adaptive scan-chunk length (slots per device dispatch) for a fleet.
+
+    A short-epoch/light scenario stops after a couple dozen slots; making
+    it compute and transfer a full 256-slot chunk wastes ~90% of the scan
+    work.  This sizes the chunk from the scenario's *expected* slots per
+    epoch — compute-phase span plus a backlog-drain estimate bounded by
+    both link capacity and the sustainable energy-harvest rate — rounded
+    up to the next power of two in ``[MIN_CHUNK, TAPE_BLOCK]``.  Purely a
+    sizing heuristic: results are chunk-invariant by contract, so a bad
+    estimate costs only throughput, never correctness.  Deterministic in
+    the fleet's physics (not its size or its sampled randomness), so
+    every epoch of a fleet reuses one scan compilation.
+    """
+    c0 = clusters[0]
+    cp = c0.comm
+    rate = np.inf
+    for c in clusters:
+        r = c.channel.nominal_rates()
+        if r is None:                      # unknown physics: legacy chunk
+            return TAPE_BLOCK
+        rate = min(rate, float(np.mean(r)))
+    lanes = max(min(float(cp.n_subchannels), c0.M), 1.0)
+    # bytes/slot the uplink can move: link-capacity bound and the
+    # energy-sustainable bound (harvest per slot buys 1/p transmit time)
+    cap_link = lanes * max(rate, 1e-9) * cp.slot_T
+    cap_energy = lanes * cp.harvest_mean * max(rate, 1e-9) \
+        / max(cp.tx_power, 1e-9)
+    cap = max(min(cap_link, cap_energy), 1e-9)
+    drain_slots = max(float(np.sum(c.grad_bytes)) for c in clusters) / cap
+    # compute-phase span: slowest lane's per-partition share, with slack
+    # for sampling noise, the deadline margin and a stage-2 round
+    comp_time = max((c.K / max(c.M, 1)) / max(float(np.min(c.rates)), 1e-9)
+                    for c in clusters)
+    est = 4.0 * comp_time / cp.slot_T + 2.0 * drain_slots + 8.0
+    chunk = MIN_CHUNK
+    while chunk < min(est, TAPE_BLOCK):
+        chunk *= 2
+    return min(chunk, TAPE_BLOCK)
 
 #: Times the chunk-scan body has been traced (== compilations triggered).
 #: The sweep layer's compile-sharing contract is asserted against this
@@ -78,7 +122,7 @@ def reset_scan_compile_cache() -> None:
 # --------------------------------------------------------------------- #
 @lru_cache(maxsize=64)
 def _chunk_runner(channel_step, S: int, M: int):
-    """Jitted ``lax.scan`` over one CHUNK of slots for an (S, M) fleet.
+    """Jitted ``lax.scan`` over one chunk of slots for an (S, M) fleet.
 
     ``channel_step`` is the channel class's pure ``step_batched`` for
     stateful channels, or ``None`` for stateless ones (their rate rows then
@@ -247,8 +291,10 @@ class _StopTracker:
 # batched comm phase
 # --------------------------------------------------------------------- #
 def _batched_comm(clusters: Sequence[EdgeCluster],
-                  jobs: Sequence[CommJob]) -> List[CommStats]:
+                  jobs: Sequence[CommJob],
+                  chunk: Optional[int] = None) -> List[CommStats]:
     c0 = clusters[0]
+    chunk = int(chunk or TAPE_BLOCK)
     S, M, cp = len(clusters), c0.M, c0.comm
     T = cp.slot_T
     grid_len = max(cp.max_slots, 1)          # the oracle always runs slot 0
@@ -285,38 +331,40 @@ def _batched_comm(clusters: Sequence[EdgeCluster],
     carry = (state, z, ch_state)
 
     tracker = _StopTracker(jobs, clusters, visible, grid_len)
-    zero_block = np.zeros((CHUNK, M))
-    n_blocks = -(-grid_len // CHUNK)
-    for b in range(n_blocks):
+    zero_rows = np.zeros((chunk, M))
+    n_chunks = -(-grid_len // chunk)
+    for b in range(n_chunks):
         if tracker.done:
             break
-        k0 = b * CHUNK
-        # only still-running seeds draw tape block b — a stopped seed's
-        # oracle run never drew it either, keeping the streams aligned
+        k0 = b * chunk
+        # only still-running seeds draw the tape covering this chunk — a
+        # stopped seed's oracle run never drew it either, keeping the
+        # streams aligned (chunks divide the tape block, so a chunk
+        # never forces a block the oracle wouldn't have reached)
         for i, t in enumerate(tapes):
             if not tracker.stopped[i]:
-                t.ensure(k0 + CHUNK - 1)
+                t.ensure(k0 + chunk - 1)
 
-        def block_or_zero(t, kind):
+        def rows_or_zero(t, kind):
             if t.n_drawn <= k0:
-                return zero_block
-            blk = (t.harvest_block(b) if kind == "h"
-                   else t.channel_block(b))
-            return blk if blk is not None else zero_block
+                return zero_rows           # stopped before this block
+            rows = (t.harvest_rows(k0, chunk) if kind == "h"
+                    else t.channel_rows(k0, chunk))
+            return rows if rows is not None else zero_rows
 
-        xs = {"k": jnp.arange(k0, k0 + CHUNK, dtype=jnp.int32),
+        xs = {"k": jnp.arange(k0, k0 + chunk, dtype=jnp.int32),
               "h": jnp.asarray(np.stack(
-                  [block_or_zero(t, "h") for t in tapes], axis=1),
+                  [rows_or_zero(t, "h") for t in tapes], axis=1),
                   jnp.float32)}
         if stateful:
-            per_seed = [c.channel.tape_arrays(block_or_zero(t, "ch"))
+            per_seed = [c.channel.tape_arrays(rows_or_zero(t, "ch"))
                         for c, t in zip(clusters, tapes)]
             xs["ch"] = {key: jnp.asarray(np.stack(
                 [d[key] for d in per_seed], axis=1))
                 for key in per_seed[0]}
         else:
             xs["r"] = jnp.asarray(
-                chan.rates_for_slots(np.arange(k0, k0 + CHUNK)),
+                chan.rates_for_slots(np.arange(k0, k0 + chunk)),
                 jnp.float32)
         carry, outs = runner(carry, xs, consts)
         tracker.consume(k0, jax.tree.map(np.asarray, outs))
@@ -347,12 +395,20 @@ class BatchedFleet:
     ``"host"`` keeps the per-seed host loop (PR-2 behaviour, the
     differential midpoint).  Both produce identical results and leave
     identical per-seed RNG/predictor state.
+
+    ``chunk`` pins the comm-scan chunk length (slots per device
+    dispatch); it must divide :data:`~repro.sim.channel.TAPE_BLOCK` so
+    randomness stays block-aligned.  Default ``None`` picks it
+    adaptively from the scenario physics (:func:`pick_chunk`); results
+    are identical for every legal chunk (the chunk-invariance contract),
+    so the knob only trades dispatch count against wasted slots.
     """
 
     def __init__(self, scenario=None,
                  scheme: str = "two-stage", seeds: Sequence[int] = (0,),
                  *, clusters: Optional[Sequence[EdgeCluster]] = None,
-                 compute: str = "batched", **overrides):
+                 compute: str = "batched", chunk: Optional[int] = None,
+                 **overrides):
         if clusters is None:
             if scenario is None:
                 raise ValueError("need a scenario spec or explicit clusters")
@@ -390,6 +446,16 @@ class BatchedFleet:
                     "grad_bytes); sweep heterogeneous grids as separate "
                     "fleets")
         self.clusters = clusters
+        if chunk is None:
+            chunk = pick_chunk(clusters)
+        else:
+            chunk = int(chunk)
+            if chunk < 1 or TAPE_BLOCK % chunk != 0:
+                raise ValueError(
+                    f"chunk must be a positive divisor of TAPE_BLOCK="
+                    f"{TAPE_BLOCK} so scan chunks stay aligned with the "
+                    f"randomness tape blocks, got {chunk}")
+        self.chunk = chunk
 
     @property
     def n_seeds(self) -> int:
@@ -401,7 +467,7 @@ class BatchedFleet:
             jobs = batched_comm_jobs(self.clusters, epoch)
         else:
             jobs = [c.comm_job(epoch) for c in self.clusters]
-        stats = _batched_comm(self.clusters, jobs)
+        stats = _batched_comm(self.clusters, jobs, self.chunk)
         return [job.assemble(st) for job, st in zip(jobs, stats)]
 
     def run(self, n_epochs: int) -> List[List[EpochResult]]:
@@ -412,8 +478,9 @@ class BatchedFleet:
 def run_fleet_batched(scenario, scheme: str = "two-stage", *,
                       seeds: Sequence[int] = (0,), n_epochs: int = 3,
                       compute: str = "batched",
+                      chunk: Optional[int] = None,
                       **overrides) -> List[List[EpochResult]]:
     """Convenience wrapper: build a fleet and run it, [epoch][seed].
     ``scenario`` is a ScenarioSpec (names accepted, deprecated)."""
     return BatchedFleet(scenario, scheme, seeds, compute=compute,
-                        **overrides).run(n_epochs)
+                        chunk=chunk, **overrides).run(n_epochs)

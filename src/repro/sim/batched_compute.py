@@ -1,4 +1,4 @@
-"""Batched two-stage compute phase for the vmap fleet engine (§3.7).
+"""Batched two-stage compute phase for the vmap fleet engine (§3.7–3.8).
 
 PR 2 batched the *communication* phase (one ``lax.scan`` dispatch advances
 every seed's uplink by a chunk of slots) but left the *compute* phase — the
@@ -16,21 +16,26 @@ registry scenario × scheme × seed):
   * **randomness** — each seed's sampling tape is drawn from that seed's
     own RNG stream (``engine.rng``) in exactly the order and sizes the
     oracle draws (:meth:`CompletionTimeModel.draw`; the same block-tape
-    idea as :class:`~repro.sim.channel.CommTape`), so after a batched
-    epoch every stream sits at the oracle's position for the comm phase
-    and the next epoch;
+    idea as :class:`~repro.sim.channel.CommTape`) — and the stage-2 tape
+    is drawn *only for lanes whose stage 2 actually triggered* — so after
+    a batched epoch every stream sits at the oracle's position for the
+    comm phase and the next epoch;
   * **arithmetic** — the vectorized steps are elementwise IEEE float64
     twins of the oracle's scalar cores (``sample_np``,
-    ``stage1_deadline``, ``stage1_accounting``, ``plan_stage1_batched``);
+    ``stage1_deadline``, ``stage1_accounting``, ``plan_stage1_batched``,
+    ``plan_stage2_batched``, ``update_times_batched``);
     ``np.quantile`` along the seed stack's last axis is bitwise identical
     to per-seed calls, and reductions keep the oracle's pairwise-sum
     shapes (the one compressed sum, ``stage1_useful``, stays per seed —
     padding it with zeros would pair addends differently);
-  * **state** — predictor updates (EWMA speeds, straggler forecast) and
-    the irregular stage-2 Vandermonde planning run through the *same*
-    per-seed objects and code paths as the oracle, so after the epoch the
-    planner/predictor state of every lane is the oracle's, and a later
-    oracle epoch on the same cluster still matches.
+  * **state** — the predictor EWMAs update as masked array ops over the
+    ``(S, M)`` seed stack (one observation per worker per epoch, so the
+    oracle's sequential loop order is immaterial), and the ragged
+    stage-2 Vandermonde planning runs group-vectorized by
+    ``(K_rem, s, n_active)`` signature through the *same* planner the
+    oracle uses, so after the epoch the planner/predictor state of every
+    lane is the oracle's, and a later oracle epoch on the same cluster
+    still matches.
 
 The cores are deliberately host-side numpy float64, not ``jnp``: the
 control plane (coding matrices, decode solves, deadlines) is float64 by
@@ -39,7 +44,10 @@ oracle is the whole point — the same reason the comm engine pre-resolves
 Gilbert–Elliott thresholds in float64 on the host.  The device-dispatch
 path of an epoch remains the comm-phase slot scan; with this module a full
 epoch (compute + comm) costs one vectorized host pass plus one device
-dispatch per slot chunk, instead of a per-seed Python loop.
+dispatch per slot chunk, instead of a per-seed Python loop.  The only
+per-seed Python left in the two-stage epoch hot path is row slicing and
+result-object construction — every planning, sampling, prediction and
+decode-requirement step is vectorized or group-vectorized.
 
 Fleets whose lanes differ in compute physics (a grouped sweep stacks cells
 that share channel/comm physics but not compute physics) are partitioned
@@ -54,8 +62,10 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.coding import StragglerPredictor
 from repro.core.runtime import (CompletionDraws, ComputePhase,
-                                TwoStageRuntime, sample_batched,
+                                TwoStageRuntime,
+                                decode_requirements_batched, sample_batched,
                                 stage1_accounting, stage1_deadline)
 from repro.sim.cluster import CommJob, EdgeCluster
 
@@ -80,15 +90,19 @@ def batched_compute_phase(runtimes: Sequence[TwoStageRuntime],
                           epoch: int) -> List[ComputePhase]:
     """The fleet's two-stage compute phases, one vectorized pass per
     compute group — bit-identical to per-seed ``compute_phase`` calls."""
-    phases: List[ComputePhase] = [None] * len(runtimes)   # type: ignore
+    phases: Dict[int, ComputePhase] = {}
     groups: Dict[Tuple, List[int]] = {}
     for i, rt in enumerate(runtimes):
         groups.setdefault(compute_group_key(rt), []).append(i)
     for idxs in groups.values():
-        for i, ph in zip(idxs, _phase_group([runtimes[i] for i in idxs],
-                                            epoch)):
+        group = _phase_group([runtimes[i] for i in idxs], epoch)
+        assert len(group) == len(idxs), "a compute group dropped a lane"
+        for i, ph in zip(idxs, group):
             phases[i] = ph
-    return phases
+    # grouping is a partition of range(len(runtimes)) by construction;
+    # assert it so a partial fill can never escape as a silent None
+    assert len(phases) == len(runtimes), "compute grouping lost lanes"
+    return [phases[i] for i in range(len(runtimes))]
 
 
 def _phase_group(rts: Sequence[TwoStageRuntime], epoch: int
@@ -105,8 +119,8 @@ def _phase_group(rts: Sequence[TwoStageRuntime], epoch: int
     # each seed's tape comes from its own stream, in oracle draw order
     draws = CompletionDraws.stack(
         [r.time_model.draw(M1, r._rng) for r in rts])
-    t1 = sample_batched([r.time_model for r in rts], workers, tasks1,
-                        draws)                                      # (S, M1)
+    models = [r.time_model for r in rts]
+    t1 = sample_batched(models, workers, tasks1, draws)             # (S, M1)
 
     per_task_q = np.take_along_axis(
         np.stack([r.predictor.time_quantile(0.9) for r in rts]),
@@ -122,36 +136,53 @@ def _phase_group(rts: Sequence[TwoStageRuntime], epoch: int
     rows, cols = np.nonzero(finished)
     ready[rows, workers[rows, cols]] = t1[rows, cols]
 
-    # --- per-seed: predictor state, stage-2 planning + sampling -------- #
-    # These run through the oracle's own objects and code paths — the
-    # predictor EWMAs are sequential per-seed state, and stage-2 builds
-    # ragged Vandermonde codes — so state and results are the oracle's by
-    # construction, and each lane's RNG stream advances only when that
-    # lane's stage 2 actually triggered (as in the oracle).
-    out: List[ComputePhase] = []
-    for i, r in enumerate(rts):
-        obs = np.isfinite(t1[i])
-        sel = obs & finished[i]
-        r.predictor.update_times(workers[i][sel], t_per_task[i][sel])
-        s_hat = r.predictor.predict_s(
-            n_active=M - int(finished[i].sum()), s_min=1)
-        st2 = r.planner.plan_stage2(st1s[i], finished[i], s_hat, speeds[i])
+    # --- batched tail: predictor update, stage-2 plan + sample --------- #
+    # EWMA updates run as one masked (S, M) scatter (each worker observed
+    # at most once per epoch, so the oracle's sequential order is
+    # immaterial); the forecast and the ragged Vandermonde stage-2
+    # planning vectorize through the predictor/planner batched twins.
+    predictors = [r.predictor for r in rts]
+    sel = np.isfinite(t1) & finished
+    StragglerPredictor.update_times_batched(predictors, workers,
+                                            t_per_task, sel)
+    s_hats = StragglerPredictor.predict_s_batched(
+        predictors, M - finished.sum(axis=1), s_min=1)
+    st2s = r0.planner.plan_stage2_batched(st1s, finished, s_hats, speeds)
 
-        s1_time = float(stage1_time[i])
-        t2 = tasks2 = None
+    # Stage-2 sampling: each triggered lane draws its tape from its own
+    # RNG stream (exactly the oracle's order and sizes — non-triggered
+    # lanes draw nothing); the arithmetic then runs vectorized per
+    # ragged group of equal active-worker count.
+    t2s: Dict[int, np.ndarray] = {}
+    by_n: Dict[int, List[int]] = {}
+    lane_draws: Dict[int, CompletionDraws] = {}
+    for i, st2 in enumerate(st2s):
         if st2.triggered:
-            tasks2 = st2.scheme.copies_per_worker
-            t2 = r.time_model.sample(st2.active_workers, tasks2, r._rng)
-            ready[i][st2.active_workers] = np.where(
-                np.isfinite(t2), s1_time + t2, np.inf)
-        out.append(ComputePhase(
-            epoch=epoch, st1=st1s[i], st2=st2, t1=t1[i], tasks1=tasks1[i],
-            finished=finished[i], T_comp=float(T_comp[i]),
-            stage1_time=s1_time, t2=t2, tasks2=tasks2, ready_time=ready[i],
-            stage1_total_task_time=float(stage1_total[i]),
-            stage1_useful=float(np.sum(t1[i][finished[i]])),
-            stage1_executed=float(stage1_executed[i])))
-    return out
+            n = len(st2.active_workers)
+            lane_draws[i] = rts[i].time_model.draw(n, rts[i]._rng)
+            by_n.setdefault(n, []).append(i)
+    for n, lanes in by_n.items():
+        wk2 = np.stack([st2s[i].active_workers for i in lanes])
+        tk2 = np.stack([st2s[i].scheme.copies_per_worker for i in lanes])
+        tt = sample_batched([rts[i].time_model for i in lanes], wk2, tk2,
+                            CompletionDraws.stack(
+                                [lane_draws[i] for i in lanes]))
+        lr = np.asarray(lanes)
+        ready[lr[:, None], wk2] = np.where(
+            np.isfinite(tt), stage1_time[lr][:, None] + tt, np.inf)
+        for j, i in enumerate(lanes):
+            t2s[i] = tt[j]
+
+    return [ComputePhase(
+        epoch=epoch, st1=st1s[i], st2=st2s[i], t1=t1[i], tasks1=tasks1[i],
+        finished=finished[i], T_comp=float(T_comp[i]),
+        stage1_time=float(stage1_time[i]), t2=t2s.get(i),
+        tasks2=(st2s[i].scheme.copies_per_worker
+                if st2s[i].triggered else None),
+        ready_time=ready[i],
+        stage1_total_task_time=float(stage1_total[i]),
+        stage1_useful=float(np.sum(t1[i][finished[i]])),
+        stage1_executed=float(stage1_executed[i])) for i in range(S)]
 
 
 def batched_comm_jobs(clusters: Sequence[EdgeCluster],
@@ -159,13 +190,22 @@ def batched_comm_jobs(clusters: Sequence[EdgeCluster],
     """One epoch's :class:`CommJob` per cluster, compute phase batched.
 
     The two-stage control loop vectorizes through
-    :func:`batched_compute_phase`; the static single-stage baselines'
-    compute phase is one cheap sampling call per seed, so those lanes
-    delegate to ``EdgeCluster.comm_job`` unchanged.  Either way the job —
-    ready times, decode gate, result assembly — is built by the cluster's
-    own ``job_from_*`` methods, shared with the event-driven engine.
+    :func:`batched_compute_phase` and the fleet's decode-arrival
+    requirements come out of one stacked pass
+    (:func:`~repro.core.runtime.decode_requirements_batched`), so the
+    jobs are produced in one sweep over precomputed rows; the static
+    single-stage baselines' compute phase is one cheap sampling call per
+    seed, so those lanes delegate to ``EdgeCluster.comm_job`` unchanged.
+    Either way the job — ready times, decode gate, result assembly — is
+    built by the cluster's own ``job_from_*`` methods, shared with the
+    event-driven engine.
     """
+    clusters = list(clusters)
+    if not clusters:
+        return []
     if clusters[0].scheme != "two-stage":
         return [c.comm_job(epoch) for c in clusters]
     phases = batched_compute_phase([c.runtime for c in clusters], epoch)
-    return [c.job_from_phase(ph) for c, ph in zip(clusters, phases)]
+    reqs = decode_requirements_batched(phases)
+    return [c.job_from_phase(ph, requirements=rq)
+            for c, ph, rq in zip(clusters, phases, reqs)]

@@ -60,6 +60,18 @@ class ChannelModel:
         (used by ``BatchedFleet`` to validate fleet homogeneity)."""
         raise NotImplementedError
 
+    def nominal_rates(self):
+        """(M,) typical per-worker rates, or None when unknown.
+
+        A *heuristic* long-run rate estimate (stationary mean for Markov
+        models, trace mean for traces) used only for sizing decisions —
+        the batched engine's adaptive scan-chunk pick — never for
+        simulation arithmetic, so exactness does not depend on it.
+        Models that cannot estimate return None and callers fall back to
+        their conservative default.
+        """
+        return None
+
     # -- randomness contract ------------------------------------------- #
     def draw_init(self, rng: np.random.Generator) -> Optional[np.ndarray]:
         """Uniforms needed to initialise state at epoch start (or None)."""
@@ -126,6 +138,9 @@ class StaticChannel(ChannelModel):
     def physics_key(self) -> tuple:
         return ("static", self._rates.tobytes())
 
+    def nominal_rates(self) -> np.ndarray:
+        return self._rates.copy()
+
     def step_np(self, state, u_row, slot):
         return self._rates.copy(), state
 
@@ -158,6 +173,11 @@ class GilbertElliottChannel(ChannelModel):
         return ("gilbert-elliott", self.rate_good.tobytes(),
                 self.rate_bad.tobytes(), self.p_gb, self.p_bg,
                 self._start_good)
+
+    def nominal_rates(self) -> np.ndarray:
+        # stationary mean of the two-state chain
+        p_good = self.p_bg / max(self.p_gb + self.p_bg, 1e-12)
+        return p_good * self.rate_good + (1.0 - p_good) * self.rate_bad
 
     def draw_init(self, rng: np.random.Generator) -> Optional[np.ndarray]:
         # start_good needs no draw; otherwise one uniform per worker for
@@ -208,6 +228,9 @@ class TraceChannel(ChannelModel):
 
     def physics_key(self) -> tuple:
         return ("trace", self.trace.tobytes(), self.loop)
+
+    def nominal_rates(self) -> np.ndarray:
+        return self.trace.mean(axis=0)
 
     def _index(self, slots):
         T = self.trace.shape[0]
@@ -268,9 +291,18 @@ class CommTape:
     def harvest(self, k: int) -> np.ndarray:
         return self._h[k // self.block][k % self.block]
 
-    # block access (batched engine) ------------------------------------ #
-    def channel_block(self, b: int) -> Optional[np.ndarray]:
-        return self._u[b] if self._u else None
+    # chunk access (batched engine; chunks divide the tape block) ------ #
+    def _rows(self, store: list, k0: int, n: int) -> np.ndarray:
+        b, off = divmod(k0, self.block)
+        assert off + n <= self.block, (
+            f"chunk [{k0}, {k0 + n}) straddles tape block {b} — scan "
+            f"chunks must stay block-aligned so RNG draws are unchanged")
+        return store[b][off:off + n]
 
-    def harvest_block(self, b: int) -> np.ndarray:
-        return self._h[b]
+    def channel_rows(self, k0: int, n: int) -> Optional[np.ndarray]:
+        """Channel uniforms for slots ``[k0, k0+n)`` (within one block)."""
+        return self._rows(self._u, k0, n) if self._u else None
+
+    def harvest_rows(self, k0: int, n: int) -> np.ndarray:
+        """Harvest draws for slots ``[k0, k0+n)`` (within one block)."""
+        return self._rows(self._h, k0, n)

@@ -227,9 +227,18 @@ class EdgeCluster:
             self.static_scheme.copies_per_worker)
         return self.job_from_static(t)
 
-    def job_from_phase(self, ph) -> CommJob:
-        """Comm job for a sampled two-stage :class:`ComputePhase`."""
-        must, w2, need2 = self.runtime.decode_requirements(ph)
+    def job_from_phase(self, ph, requirements=None) -> CommJob:
+        """Comm job for a sampled two-stage :class:`ComputePhase`.
+
+        ``requirements`` optionally supplies this phase's precomputed
+        ``(must_arrive, stage2_workers, n_needed2)`` triple — the batched
+        engine computes the whole fleet's triples in one stacked pass
+        (:func:`~repro.core.runtime.decode_requirements_batched`) and
+        hands each job its row, so gate/assembly semantics stay defined
+        here in one place for both engines.
+        """
+        must, w2, need2 = (self.runtime.decode_requirements(ph)
+                           if requirements is None else requirements)
 
         def decodable(arrived: np.ndarray) -> bool:
             if len(must) == 0 and need2 == 0:

@@ -13,14 +13,28 @@ compute engine owns is compared with ``==``.
 import numpy as np
 import pytest
 
-from repro.core.runtime import CompletionDraws, sample_batched
+from repro.core.coding import StragglerPredictor, TwoStagePlanner
+from repro.core.runtime import (CompletionDraws, decode_requirements_batched,
+                                sample_batched)
 from repro.sim import (BatchedFleet, available_scenarios, build_cluster,
                        compute_group_key, scenario_spec)
-from repro.sim.batched_compute import batched_compute_phase
+from repro.sim.batched_compute import batched_compute_phase, batched_comm_jobs
 from repro.sim.cluster import SCHEMES
 
 SEEDS = [0, 101, 1002]
 N_EPOCHS = 2
+
+
+def _rng_state(rt):
+    return rt._rng.bit_generator.state
+
+
+def _assert_predictors_equal(pa, pb, ctx=""):
+    np.testing.assert_array_equal(pa._t.mean, pb._t.mean, err_msg=ctx)
+    np.testing.assert_array_equal(pa._t.var, pb._t.var, err_msg=ctx)
+    np.testing.assert_array_equal(pa._t.initialized, pb._t.initialized,
+                                  err_msg=ctx)
+    assert pa._s_mean == pb._s_mean and pa._s_var == pb._s_var, ctx
 
 
 def _assert_epoch_exact(oracle, batched, ctx):
@@ -182,6 +196,206 @@ def test_batched_compute_phase_is_callable_standalone():
         if ref.triggered:
             np.testing.assert_array_equal(ph.t2, ref.t2)
             np.testing.assert_array_equal(ph.st2.scheme.B, ref.st2.scheme.B)
+
+
+# --------------------------------------------------------------------- #
+# the batched-tail differential matrix: every registry scenario × scheme,
+# bitwise on stage-2 fields, predictor EWMA state and RNG stream position
+# after the epoch — including lanes where stage 2 does not trigger
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("scenario", available_scenarios())
+def test_batched_tail_differential_matrix(scenario, scheme):
+    spec = scenario_spec(scenario)
+    fleet = [build_cluster(spec, scheme, s) for s in SEEDS]
+    oracle = [build_cluster(spec, scheme, s) for s in SEEDS]
+    for e in range(N_EPOCHS):
+        jobs = batched_comm_jobs(fleet, e)
+        refs = [c.comm_job(e) for c in oracle]
+        for i, seed in enumerate(SEEDS):
+            ctx = f"{scenario}/{scheme} seed={seed} epoch={e}"
+            np.testing.assert_array_equal(jobs[i].ready_time,
+                                          refs[i].ready_time, err_msg=ctx)
+            # RNG stream position after the compute phase: bit-identical
+            a = (fleet[i].runtime._rng if scheme == "two-stage"
+                 else fleet[i].engine.rng)
+            b = (oracle[i].runtime._rng if scheme == "two-stage"
+                 else oracle[i].engine.rng)
+            assert a.bit_generator.state == b.bit_generator.state, ctx
+            if scheme != "two-stage":
+                continue
+            _assert_predictors_equal(fleet[i].runtime.predictor,
+                                     oracle[i].runtime.predictor, ctx)
+
+
+@pytest.mark.parametrize("scenario", available_scenarios())
+def test_batched_stage2_fields_bitwise(scenario):
+    """Stage-2 plan internals — trigger flag, worker assignments, the
+    ragged Vandermonde code, sampled t2, ready times — must be bitwise
+    the oracle's on every lane, triggered or not."""
+    spec = scenario_spec(scenario)
+    a = [build_cluster(spec, "two-stage", s).runtime for s in SEEDS]
+    b = [build_cluster(spec, "two-stage", s).runtime for s in SEEDS]
+    for e in range(N_EPOCHS + 1):
+        phases = batched_compute_phase(a, epoch=e)
+        for i, (rt, ph) in enumerate(zip(b, phases)):
+            ref = rt.compute_phase(e)
+            ctx = f"{scenario} seed={SEEDS[i]} epoch={e}"
+            assert ph.st2.triggered == ref.st2.triggered, ctx
+            np.testing.assert_array_equal(ph.st2.active_workers,
+                                          ref.st2.active_workers,
+                                          err_msg=ctx)
+            np.testing.assert_array_equal(ph.st2.covered_partitions,
+                                          ref.st2.covered_partitions,
+                                          err_msg=ctx)
+            np.testing.assert_array_equal(ph.ready_time, ref.ready_time,
+                                          err_msg=ctx)
+            if ph.st2.triggered:
+                assert ph.st2.scheme.s == ref.st2.scheme.s, ctx
+                np.testing.assert_array_equal(ph.st2.scheme.B,
+                                              ref.st2.scheme.B, err_msg=ctx)
+                np.testing.assert_array_equal(ph.st2.scheme.nodes,
+                                              ref.st2.scheme.nodes,
+                                              err_msg=ctx)
+                np.testing.assert_array_equal(ph.t2, ref.t2, err_msg=ctx)
+                np.testing.assert_array_equal(ph.tasks2, ref.tasks2,
+                                              err_msg=ctx)
+            else:
+                assert ph.t2 is None and ph.tasks2 is None, ctx
+            assert (_rng_state(a[i]) == _rng_state(b[i])), ctx
+
+
+def test_decode_requirements_batched_matches_scalar():
+    spec = scenario_spec("bursty-stragglers")
+    rts = [build_cluster(spec, "two-stage", s).runtime for s in SEEDS]
+    for e in range(2):
+        phases = batched_compute_phase(rts, epoch=e)
+        reqs = decode_requirements_batched(phases)
+        for rt, ph, (must, w2, need2) in zip(rts, phases, reqs):
+            m_ref, w_ref, n_ref = rt.decode_requirements(ph)
+            np.testing.assert_array_equal(must, m_ref)
+            np.testing.assert_array_equal(w2, w_ref)
+            assert need2 == n_ref
+    assert decode_requirements_batched([]) == []
+
+
+# --------------------------------------------------------------------- #
+# regression: the old `[None] * len(runtimes)` partial-fill hole
+# --------------------------------------------------------------------- #
+def test_batched_compute_phase_empty_and_single_lane():
+    assert batched_compute_phase([], epoch=0) == []
+    assert batched_comm_jobs([], epoch=0) == []
+    spec = scenario_spec("homogeneous")
+    lone = build_cluster(spec, "two-stage", 5)
+    oracle = build_cluster(spec, "two-stage", 5)
+    (ph,) = batched_compute_phase([lone.runtime], epoch=0)
+    ref = oracle.runtime.compute_phase(0)
+    np.testing.assert_array_equal(ph.ready_time, ref.ready_time)
+    assert ph.T_comp == ref.T_comp
+
+
+def test_compute_grouping_fills_every_lane_including_singletons():
+    """A fleet splitting into a 2-lane group and a 1-lane group must fill
+    every output slot (no None survives grouping) and match the oracle."""
+    base = scenario_spec("homogeneous")
+    bursty = base.with_overrides(name="homogeneous-bursty",
+                                 straggler_prob=0.25)
+    specs = [base, base, bursty]
+    clusters = [build_cluster(s, "two-stage", 21 + i)
+                for i, s in enumerate(specs)]
+    assert len({compute_group_key(c.runtime) for c in clusters}) == 2
+    phases = batched_compute_phase([c.runtime for c in clusters], epoch=0)
+    assert len(phases) == 3 and all(p is not None for p in phases)
+    for i, s in enumerate(specs):
+        ref = build_cluster(s, "two-stage", 21 + i).runtime.compute_phase(0)
+        np.testing.assert_array_equal(phases[i].ready_time, ref.ready_time)
+
+
+# --------------------------------------------------------------------- #
+# deterministic twins of the hypothesis property suites (these always
+# run; tests/test_tail_properties.py widens them under hypothesis)
+# --------------------------------------------------------------------- #
+def test_update_times_batched_matches_sequential_random():
+    rng = np.random.default_rng(17)
+    S, M = 7, 6
+    seq = [StragglerPredictor(M) for _ in range(S)]
+    bat = [StragglerPredictor(M) for _ in range(S)]
+    for rep in range(25):
+        n = int(rng.integers(1, M + 1))
+        workers = np.stack([rng.permutation(M)[:n] for _ in range(S)])
+        times = rng.uniform(-0.5, 3.0, (S, n))
+        times[rng.random((S, n)) < 0.1] = np.inf     # faulted observations
+        mask = rng.random((S, n)) < 0.8
+        for i in range(S):
+            seq[i].update_times(workers[i][mask[i]], times[i][mask[i]])
+        StragglerPredictor.update_times_batched(bat, workers, times, mask)
+        for i in range(S):
+            _assert_predictors_equal(seq[i], bat[i], f"rep={rep} lane={i}")
+        counts = rng.integers(0, 4, S)
+        for i in range(S):
+            seq[i].update_straggler_count(int(counts[i]))
+            bat[i].update_straggler_count(int(counts[i]))
+        n_active = rng.integers(1, M + 1, S)
+        got = StragglerPredictor.predict_s_batched(bat, n_active, s_min=1)
+        want = [seq[i].predict_s(int(n_active[i]), s_min=1)
+                for i in range(S)]
+        np.testing.assert_array_equal(got, want)
+
+
+def test_plan_stage2_batched_matches_scalar_random():
+    rng = np.random.default_rng(23)
+    S, M, M1, K = 8, 6, 4, 6
+    for select in ("rotate", "fastest"):
+        pl = TwoStagePlanner(M, K, M1, select=select)
+        for rep in range(30):
+            speeds = rng.uniform(0.2, 5.0, (S, M))
+            st1s = pl.plan_stage1_batched(int(rng.integers(0, 4)), speeds)
+            fin = rng.random((S, M1)) < rng.uniform(0.05, 0.95)
+            s_hats = rng.integers(0, 4, S)
+            plans = pl.plan_stage2_batched(st1s, fin, s_hats, speeds)
+            for i in range(S):
+                ref = pl.plan_stage2(st1s[i], fin[i], int(s_hats[i]),
+                                     speeds[i])
+                got = plans[i]
+                ctx = f"{select} rep={rep} lane={i}"
+                assert got.triggered == ref.triggered, ctx
+                np.testing.assert_array_equal(
+                    got.active_workers, ref.active_workers, err_msg=ctx)
+                np.testing.assert_array_equal(
+                    got.uncovered_partitions, ref.uncovered_partitions,
+                    err_msg=ctx)
+                np.testing.assert_array_equal(
+                    got.finished_workers, ref.finished_workers, err_msg=ctx)
+                if ref.triggered:
+                    assert got.scheme.s == ref.scheme.s, ctx
+                    np.testing.assert_array_equal(
+                        got.scheme.B, ref.scheme.B, err_msg=ctx)
+                    np.testing.assert_array_equal(
+                        got.scheme.nodes, ref.scheme.nodes, err_msg=ctx)
+
+
+def test_rs_decode_cache_matches_uncached_and_never_aliases():
+    from repro.core.coding.decoder import (_rs_decode_cached, _rs_decode_np,
+                                           rs_decode_weights)
+    from repro.core.coding.matrices import default_nodes
+    rng = np.random.default_rng(31)
+    _rs_decode_cached.cache_clear()
+    for rep in range(40):
+        M = int(rng.integers(2, 9))
+        nodes = default_nodes(M)
+        s = int(rng.integers(0, M))
+        alive = rng.random(M) < 0.7
+        if (~alive).sum() > s:
+            with pytest.raises(ValueError):
+                rs_decode_weights(nodes, alive, s)
+            continue
+        a = rs_decode_weights(nodes, alive, s)
+        np.testing.assert_array_equal(a, _rs_decode_np(nodes, alive, s))
+        a[:] = -123.0                       # caller mutates its copy …
+        b = rs_decode_weights(nodes, alive, s)
+        np.testing.assert_array_equal(     # … the cache must not see it
+            b, _rs_decode_np(nodes, alive, s))
+        assert b.flags.writeable
 
 
 # --------------------------------------------------------------------- #

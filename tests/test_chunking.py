@@ -1,0 +1,106 @@
+"""Comm-scan chunking: adaptivity, validation, and the invariance contract.
+
+The scan chunk (slots per device dispatch) is decoupled from the
+randomness-tape block (DESIGN.md §3.8): any chunk that divides
+``TAPE_BLOCK`` keeps tape draws block-aligned, so the engine must produce
+bit-identical results — same ``FleetSummary`` rows, same per-seed RNG
+stream positions — for every legal chunk.  The adaptive pick
+(:func:`repro.sim.batched.pick_chunk`) is therefore pure throughput
+tuning: a wrong estimate can never change results.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import BatchedFleet, pick_chunk, scenario_spec, \
+    summarize_fleet
+from repro.sim.batched import MIN_CHUNK
+from repro.sim.channel import TAPE_BLOCK
+
+SEEDS = [0, 7, 19]
+N_EPOCHS = 2
+
+
+def _summary(spec, scheme, chunk):
+    fleet = BatchedFleet(spec, scheme, SEEDS, chunk=chunk)
+    per_epoch = fleet.run(N_EPOCHS)                       # [epoch][seed]
+    results = [per_epoch[e][i] for i in range(len(SEEDS))
+               for e in range(N_EPOCHS)]
+    return summarize_fleet(spec.name, scheme, len(SEEDS), N_EPOCHS,
+                           results)
+
+
+# --------------------------------------------------------------------- #
+# the invariance contract: bit-identical rows for every legal chunk
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("scheme", ["two-stage", "cyclic"])
+@pytest.mark.parametrize("scenario", ["homogeneous", "saturated-uplink"])
+def test_comm_scan_chunk_invariance(scenario, scheme):
+    """A short-epoch/light scenario and a saturated long-drain scenario
+    must summarize bit-identically (dataclass ``==`` over float fields)
+    for chunk ∈ {32, 64, TAPE_BLOCK}."""
+    spec = scenario_spec(scenario)
+    rows = [_summary(spec, scheme, chunk)
+            for chunk in (32, 64, TAPE_BLOCK)]
+    assert rows[0] == rows[1] == rows[2]
+
+
+def test_adaptive_chunk_equals_any_forced_chunk():
+    """The adaptive pick is just a choice among legal chunks — its rows
+    must equal the forced-TAPE_BLOCK (legacy) rows bitwise."""
+    spec = scenario_spec("heterogeneous-rates")
+    assert _summary(spec, "two-stage", None) == \
+        _summary(spec, "two-stage", TAPE_BLOCK)
+
+
+# --------------------------------------------------------------------- #
+# the adaptive pick
+# --------------------------------------------------------------------- #
+def test_adaptive_chunk_scales_with_scenario():
+    light = BatchedFleet(scenario_spec("homogeneous"), "two-stage", [0])
+    heavy = BatchedFleet(scenario_spec("saturated-uplink"), "two-stage",
+                         [0])
+    assert light.chunk < TAPE_BLOCK          # short epochs: small chunks
+    assert heavy.chunk == TAPE_BLOCK         # long drains: full blocks
+    for fleet in (light, heavy):
+        assert MIN_CHUNK <= fleet.chunk <= TAPE_BLOCK
+        assert TAPE_BLOCK % fleet.chunk == 0
+
+
+def test_adaptive_chunk_is_deterministic_in_physics():
+    spec = scenario_spec("fading-uplink")
+    a = BatchedFleet(spec, "two-stage", [0])
+    b = BatchedFleet(spec, "two-stage", [3, 4, 5])   # fleet size ≠ factor
+    assert a.chunk == b.chunk == pick_chunk(a.clusters)
+
+
+def test_chunk_must_divide_tape_block():
+    spec = scenario_spec("homogeneous")
+    for bad in (0, -32, 48, TAPE_BLOCK * 2):
+        with pytest.raises(ValueError, match="divisor of TAPE_BLOCK"):
+            BatchedFleet(spec, "two-stage", [0], chunk=bad)
+
+
+# --------------------------------------------------------------------- #
+# the benchmark artifact records the chosen chunk
+# --------------------------------------------------------------------- #
+def test_fleet_benchmark_records_chunk():
+    from benchmarks.fleet_scale import run_suite
+    res = run_suite([("homogeneous", "compute-bound", 2, 1)])
+    row = res["scenarios"]["homogeneous"]
+    assert row["chunk"] == BatchedFleet(scenario_spec("homogeneous"),
+                                        "two-stage", [0]).chunk
+    assert TAPE_BLOCK % row["chunk"] == 0
+
+
+def test_rng_stream_position_is_chunk_invariant():
+    """After an epoch, every seed's RNG stream must sit at the same
+    position regardless of chunk — the property that keeps a chunked
+    fleet continuable by the oracle."""
+    spec = scenario_spec("homogeneous")
+    states = []
+    for chunk in (32, TAPE_BLOCK):
+        fleet = BatchedFleet(spec, "two-stage", SEEDS, chunk=chunk)
+        fleet.run_epoch(0)
+        states.append([c.engine.rng.bit_generator.state
+                       for c in fleet.clusters])
+    assert states[0] == states[1]

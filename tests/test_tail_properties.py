@@ -1,0 +1,107 @@
+"""Hypothesis property suites for the batched epoch tail (DESIGN.md §3.8).
+
+Widened, randomized versions of the deterministic twins in
+``tests/test_batched_compute.py``: for *any* drawn masks, times, forecasts
+and straggler patterns —
+
+  * the batched predictor EWMA update is a bit-exact float64 twin of the
+    sequential per-observation loop;
+  * ``plan_stage2_batched`` equals per-seed ``plan_stage2`` on every lane
+    (trigger flag, active sets, the ragged Vandermonde code);
+  * the LRU-cached RS decode solve returns arrays equal to uncached
+    solves, and caller mutation never leaks back into the cache.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coding import StragglerPredictor, TwoStagePlanner
+from repro.core.coding.decoder import _rs_decode_np, rs_decode_weights
+from repro.core.coding.matrices import default_nodes
+
+M, M1, K = 6, 4, 6
+
+
+@settings(deadline=None, max_examples=40)
+@given(data=st.data(), seed=st.integers(0, 2**16),
+       n_rounds=st.integers(1, 3))
+def test_batched_predictor_update_equals_sequential(data, seed, n_rounds):
+    rng = np.random.default_rng(seed)
+    S = data.draw(st.integers(1, 6), label="S")
+    seq = [StragglerPredictor(M) for _ in range(S)]
+    bat = [StragglerPredictor(M) for _ in range(S)]
+    for _ in range(n_rounds):
+        n = data.draw(st.integers(1, M), label="n")
+        workers = np.stack([rng.permutation(M)[:n] for _ in range(S)])
+        times = rng.uniform(-1.0, 4.0, (S, n))     # includes t <= 0 rows
+        times[rng.random((S, n)) < 0.15] = np.inf  # and faulted ones
+        mask = rng.random((S, n)) < 0.75
+        for i in range(S):
+            seq[i].update_times(workers[i][mask[i]], times[i][mask[i]])
+        StragglerPredictor.update_times_batched(bat, workers, times, mask)
+        for i in range(S):
+            np.testing.assert_array_equal(seq[i]._t.mean, bat[i]._t.mean)
+            np.testing.assert_array_equal(seq[i]._t.var, bat[i]._t.var)
+            np.testing.assert_array_equal(seq[i]._t.initialized,
+                                          bat[i]._t.initialized)
+        counts = rng.integers(0, 5, S)
+        for i in range(S):
+            seq[i].update_straggler_count(int(counts[i]))
+            bat[i].update_straggler_count(int(counts[i]))
+        n_active = rng.integers(1, M + 1, S)
+        np.testing.assert_array_equal(
+            StragglerPredictor.predict_s_batched(bat, n_active, s_min=1),
+            [seq[i].predict_s(int(n_active[i]), s_min=1)
+             for i in range(S)])
+
+
+@settings(deadline=None, max_examples=40)
+@given(seed=st.integers(0, 2**16), epoch=st.integers(0, 5),
+       select=st.sampled_from(["rotate", "fastest"]),
+       S=st.integers(1, 6))
+def test_plan_stage2_batched_equals_scalar(seed, epoch, select, S):
+    rng = np.random.default_rng(seed)
+    pl = TwoStagePlanner(M, K, M1, select=select)
+    speeds = rng.uniform(0.1, 6.0, (S, M))
+    st1s = pl.plan_stage1_batched(epoch, speeds)
+    fin = rng.random((S, M1)) < rng.uniform(0.0, 1.0)
+    s_hats = rng.integers(0, 5, S)
+    plans = pl.plan_stage2_batched(st1s, fin, s_hats, speeds)
+    for i in range(S):
+        ref = pl.plan_stage2(st1s[i], fin[i], int(s_hats[i]), speeds[i])
+        got = plans[i]
+        assert got.triggered == ref.triggered
+        np.testing.assert_array_equal(got.active_workers,
+                                      ref.active_workers)
+        np.testing.assert_array_equal(got.uncovered_partitions,
+                                      ref.uncovered_partitions)
+        np.testing.assert_array_equal(got.covered_partitions,
+                                      ref.covered_partitions)
+        np.testing.assert_array_equal(got.finished_workers,
+                                      ref.finished_workers)
+        if ref.triggered:
+            assert got.scheme.s == ref.scheme.s
+            np.testing.assert_array_equal(got.scheme.B, ref.scheme.B)
+            np.testing.assert_array_equal(got.scheme.nodes,
+                                          ref.scheme.nodes)
+
+
+@settings(deadline=None, max_examples=60)
+@given(data=st.data(), n=st.integers(2, 10))
+def test_rs_decode_cache_equals_uncached_and_no_aliasing(data, n):
+    nodes = default_nodes(n)
+    s = data.draw(st.integers(0, n - 1), label="s")
+    alive = np.array(data.draw(
+        st.lists(st.booleans(), min_size=n, max_size=n), label="alive"))
+    if (~alive).sum() > s:
+        with pytest.raises(ValueError):
+            rs_decode_weights(nodes, alive, s)
+        return
+    a = rs_decode_weights(nodes, alive, s)
+    np.testing.assert_array_equal(a, _rs_decode_np(nodes, alive, s))
+    assert a.flags.writeable
+    a[:] = np.nan                           # caller mutates its copy …
+    np.testing.assert_array_equal(          # … cache stays clean
+        rs_decode_weights(nodes, alive, s), _rs_decode_np(nodes, alive, s))
