@@ -19,6 +19,15 @@ scenario) are reported informationally and do not fail; metrics in the
 baseline but missing from the run fail, so a silently dropped benchmark
 row cannot hide a regression.
 
+The fleet artifact additionally carries a ``telemetry`` section (the
+telemetry-enabled vs -disabled throughput ratio from
+``benchmarks.fleet_scale``); it is gated against an *absolute* floor
+(default 0.95, i.e. ≤5%% overhead when telemetry is on — the budget of
+the zero-cost-off contract, DESIGN.md §3.9) rather than a committed
+baseline, and a missing section fails so the overhead check cannot
+silently drop out of CI.  ``--telemetry-floor`` / env
+``TELEMETRY_OVERHEAD_FLOOR`` override it.
+
     PYTHONPATH=src python -m benchmarks.check_regression            # gate
     PYTHONPATH=src python -m benchmarks.check_regression --update   # refresh
 
@@ -34,6 +43,8 @@ import os
 import sys
 
 DEFAULT_TOLERANCE = 0.30
+#: Absolute floor on enabled/disabled telemetry throughput (≤5% overhead).
+TELEMETRY_FLOOR = 0.95
 BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 
 
@@ -114,6 +125,26 @@ def check_pair(bench_path: str, baseline_path: str, extract,
     return not failures and not missing
 
 
+def check_telemetry_overhead(data: dict, floor: float) -> bool:
+    """Gate the fleet artifact's telemetry on/off throughput ratio
+    against the absolute ``floor``; a missing section fails (the
+    overhead budget must not silently drop out of the benchmark job)."""
+    section = data.get("telemetry")
+    if not isinstance(section, dict) or "throughput_ratio" not in section:
+        print("FAIL telemetry overhead: no 'telemetry' section in the "
+              "fleet artifact; run benchmarks.fleet_scale from this tree")
+        return False
+    ratio = float(section["throughput_ratio"])
+    label = section.get("scenario", "?")
+    if ratio < floor:
+        print(f"FAIL telemetry overhead on {label}: enabled/disabled "
+              f"throughput ratio {ratio:.3f} < floor {floor:.2f}")
+        return False
+    print(f"telemetry overhead on {label}: ratio {ratio:.3f} >= floor "
+          f"{floor:.2f}")
+    return True
+
+
 def update_baseline(bench_path: str, baseline_path: str, extract,
                     note: str) -> None:
     metrics = extract(_load(bench_path))
@@ -139,6 +170,12 @@ def main(argv=None) -> int:
                     help="allowed fractional drop below baseline "
                          "(0.30 = fail below 70%% of baseline; env "
                          "BENCH_REGRESSION_TOLERANCE overrides)")
+    ap.add_argument("--telemetry-floor", type=float,
+                    default=float(os.environ.get(
+                        "TELEMETRY_OVERHEAD_FLOOR", TELEMETRY_FLOOR)),
+                    help="absolute floor on the telemetry enabled/disabled "
+                         "throughput ratio (0.95 = at most 5%% overhead; "
+                         "env TELEMETRY_OVERHEAD_FLOOR overrides)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baselines from the current artifacts")
     ap.add_argument("--note", default="refreshed via --update",
@@ -170,6 +207,7 @@ def main(argv=None) -> int:
             ok = False
             continue
         ok &= check_pair(bench, baseline, extract, args.tolerance)
+    ok &= check_telemetry_overhead(_load(args.fleet), args.telemetry_floor)
     print("benchmark regression gate: " + ("PASS" if ok else "FAIL"))
     return 0 if ok else 1
 

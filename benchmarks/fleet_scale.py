@@ -65,6 +65,45 @@ def _time_engine(scenario: str, scheme: str, engine: str, n_seeds: int,
     return time.perf_counter() - t0
 
 
+def telemetry_overhead(scenario: str, scheme: str = "two-stage",
+                       n_seeds: int = 64, n_epochs: int = 1,
+                       repeats: int = 3) -> dict:
+    """Telemetry-enabled vs -disabled throughput on the batched engine.
+
+    Measures the same fleet with ``telemetry=None`` and with a full
+    :class:`~repro.telemetry.recorder.FleetRecorder` (fresh per run —
+    series + spans + epoch events), best-of-``repeats`` each after
+    warming both compile paths (the telemetry scan is a separate trace).
+    ``throughput_ratio`` = enabled / disabled seed-epochs/sec; the
+    zero-cost-off contract budget (gated by ``check_regression.py``) is
+    ratio ≥ 0.95.
+    """
+    from repro.sim import BatchedFleet, scenario_spec
+    from repro.telemetry import FleetRecorder
+    spec = scenario_spec(scenario)
+    seeds = list(range(n_seeds))
+
+    def once(enabled: bool) -> float:
+        rec = FleetRecorder() if enabled else None
+        fleet = BatchedFleet(spec, scheme, seeds, telemetry=rec)
+        t0 = time.perf_counter()
+        fleet.run(n_epochs)
+        return time.perf_counter() - t0
+
+    once(False)                          # warm both jit cache entries
+    once(True)
+    disabled = min(once(False) for _ in range(repeats))
+    enabled = min(once(True) for _ in range(repeats))
+    work = n_seeds * n_epochs
+    return {"scenario": scenario, "scheme": scheme, "n_seeds": n_seeds,
+            "n_epochs": n_epochs, "repeats": repeats,
+            "disabled": {"seconds": disabled,
+                         "seed_epochs_per_sec": work / disabled},
+            "enabled": {"seconds": enabled,
+                        "seed_epochs_per_sec": work / enabled},
+            "throughput_ratio": disabled / enabled}
+
+
 def run_suite(rows, scheme: str = "two-stage") -> dict:
     from repro.sim import BatchedFleet, scenario_spec
     out = {"config": {"rows": [list(r) for r in rows], "scheme": scheme,
@@ -88,6 +127,12 @@ def run_suite(rows, scheme: str = "two-stage") -> dict:
         row["speedup_vs_hybrid"] = (row["batched"]["seed_epochs_per_sec"]
                                     / row["hybrid"]["seed_epochs_per_sec"])
         out["scenarios"][name] = row
+    # telemetry on/off overhead on the first row's scenario (homogeneous
+    # in both curated suites) — the ≤5%% budget check_regression.py gates
+    name0, _, n_seeds0, n_epochs0 = rows[0]
+    out["telemetry"] = telemetry_overhead(name0, scheme,
+                                          n_seeds=n_seeds0,
+                                          n_epochs=n_epochs0)
     return out
 
 
@@ -100,6 +145,11 @@ def main(report=None) -> None:
                    1e6 * row["batched"]["seconds"],
                    f"speedup={row['speedup']:.1f}x,"
                    f"vs_hybrid={row['speedup_vs_hybrid']:.2f}x")
+    if report is not None:
+        tel = res["telemetry"]
+        report("fleet_scale.telemetry.enabled",
+               1e6 * tel["enabled"]["seconds"],
+               f"ratio={tel['throughput_ratio']:.3f}")
 
 
 def _cli() -> None:
@@ -129,12 +179,20 @@ def _cli() -> None:
             for n, regime, s, e in rows]
     res = run_suite(rows, scheme=args.scheme)
     for name, row in res["scenarios"].items():
-        print(f"{name:22s} [{row['regime']:13s}] "
+        # per-regime row: every engine's throughput plus the adaptive
+        # comm-scan chunk the batched engines dispatched with
+        print(f"{name:22s} [{row['regime']:13s}] chunk={row['chunk']:3d} "
               f"oracle={row['oracle']['seed_epochs_per_sec']:8.2f} "
               f"hybrid={row['hybrid']['seed_epochs_per_sec']:8.2f} "
               f"batched={row['batched']['seed_epochs_per_sec']:8.2f} "
               f"seed-epochs/s  speedup={row['speedup']:5.1f}x "
               f"(vs hybrid {row['speedup_vs_hybrid']:4.2f}x)")
+    tel = res["telemetry"]
+    print(f"telemetry overhead     [{tel['scenario']}, batched] "
+          f"on={tel['enabled']['seed_epochs_per_sec']:8.2f} "
+          f"off={tel['disabled']['seed_epochs_per_sec']:8.2f} "
+          f"seed-epochs/s  ratio={tel['throughput_ratio']:5.3f} "
+          f"(budget >= 0.95)")
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

@@ -33,9 +33,25 @@ import jax.numpy as jnp
 from .queues import QueueState, SystemParams, step_queues
 
 __all__ = ["Observation", "Decisions", "schedule_slot",
-           "batched_schedule_slot", "run_horizon", "jain_index"]
+           "batched_schedule_slot", "run_horizon", "jain_index",
+           "on_schedule_trace"]
 
 _LN2 = 0.6931471805599453
+
+#: Trace-time listeners: each is called with the site name whenever
+#: ``schedule_slot`` is (re)traced by jax — i.e. once per compilation,
+#: never per compiled slot.  ``repro.telemetry.compilation`` subscribes
+#: its compile counter here, so the core layer stays telemetry-free
+#: while every scheduler recompile (the oracle's per-cluster jit and the
+#: batched engine's vmapped scan body alike) is still accounted.
+_trace_listeners: list = []
+
+
+def on_schedule_trace(listener) -> None:
+    """Subscribe ``listener(site_name)`` to ``schedule_slot`` retraces
+    (idempotent: re-registering the same callable is a no-op)."""
+    if listener not in _trace_listeners:
+        _trace_listeners.append(listener)
 
 
 class Observation(NamedTuple):
@@ -107,6 +123,8 @@ def schedule_slot(state: QueueState, params: SystemParams, obs: Observation,
                   *, theta: jax.Array | None = None
                   ) -> tuple[QueueState, Decisions]:
     """One slot: closed-form P4–P7 decisions, then queue evolution."""
+    for _listener in _trace_listeners:    # executes only while jax traces
+        _listener("schedule_slot")
     if theta is None:
         theta = 0.5 * params.E_cap
     y = _p4_auxiliary(state.H, obs.D, params.V)

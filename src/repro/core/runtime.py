@@ -25,10 +25,14 @@ sampled worker behaviour.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import numpy as np
+
+if TYPE_CHECKING:                      # circular at runtime: sim → core
+    from repro.sim.cluster import CommStats
 
 from repro.core.coding import (CodingScheme, StragglerPredictor,
                                TwoStagePlanner, decode_weights)
@@ -242,7 +246,7 @@ class EpochResult:
     compute_time: float = 0.0
     comm_time: float = 0.0
     decode_ok: bool = True
-    comm: Optional[object] = None     # repro.sim.cluster.CommStats
+    comm: Optional["CommStats"] = None   # None on instant-uplink paths
 
     @property
     def utilization(self) -> float:
@@ -312,6 +316,19 @@ class TwoStageRuntime:
         self.engine = engine
         self._rng = (engine.rng if engine is not None
                      else np.random.default_rng(seed + 1))
+        #: Optional telemetry recorder (duck-typed; see
+        #: ``repro.telemetry.recorder``).  When set and span recording is
+        #: enabled, the compute phase wraps its stage-1 and stage-2
+        #: halves in wall-clock spans; ``None`` (the default) keeps the
+        #: phase span-free — the zero-cost off switch.
+        self.telemetry = None
+
+    def _span(self, name: str, **meta):
+        rec = self.telemetry
+        if rec is not None and rec.wants_spans:
+            return rec.span(name, lane=getattr(self, "telemetry_lane", 0),
+                            **meta)
+        return contextlib.nullcontext()
 
     # ------------------------------------------------------------------ #
     def compute_phase(self, epoch: int) -> ComputePhase:
@@ -323,41 +340,45 @@ class TwoStageRuntime:
         (``repro.sim.batched_compute``), so the two paths cannot drift.
         """
         M, K = self.M, self.K
-        speeds = self.predictor.speeds()
-        st1 = self.planner.plan_stage1(epoch, speeds)
-        tasks1 = st1.scheme.copies_per_worker                 # (M1,)
-        t1 = self.time_model.sample(st1.workers, tasks1, self._rng)
+        with self._span("stage1", epoch=epoch):
+            speeds = self.predictor.speeds()
+            st1 = self.planner.plan_stage1(epoch, speeds)
+            tasks1 = st1.scheme.copies_per_worker             # (M1,)
+            t1 = self.time_model.sample(st1.workers, tasks1, self._rng)
 
-        # per-worker-aware deadline: quantile (over selected workers) of the
-        # predicted finish time of each worker's own share
-        per_task_q = self.predictor.time_quantile(0.9)[st1.workers]
-        T_comp = float(stage1_deadline(per_task_q, tasks1,
-                                       self.deadline_quantile))
-        finished = t1 <= T_comp
+            # per-worker-aware deadline: quantile (over selected workers)
+            # of the predicted finish time of each worker's own share
+            per_task_q = self.predictor.time_quantile(0.9)[st1.workers]
+            T_comp = float(stage1_deadline(per_task_q, tasks1,
+                                           self.deadline_quantile))
+            finished = t1 <= T_comp
 
-        # predictor update with whatever we observed by the deadline
-        obs = np.isfinite(t1)
-        self.predictor.update_times(st1.workers[obs & finished],
-                                    (t1 / np.maximum(tasks1, 1))[obs & finished])
+            # predictor update with whatever we observed by the deadline
+            obs = np.isfinite(t1)
+            self.predictor.update_times(
+                st1.workers[obs & finished],
+                (t1 / np.maximum(tasks1, 1))[obs & finished])
 
-        s_hat = self.predictor.predict_s(
-            n_active=M - int(finished.sum()), s_min=1)
-        st2 = self.planner.plan_stage2(st1, finished, s_hat, speeds)
-
+        # RNG-free stage-1 accounting (hoisted ahead of the stage-2 span so
+        # the span covers planning *and* sampling without reordering draws)
         stage1_time, stage1_total, stage1_executed = (
             float(x) for x in stage1_accounting(t1, tasks1, finished,
                                                 T_comp))
         stage1_useful = float(np.sum(t1[finished]))
-
         ready = np.full(M, np.inf)
         ready[st1.workers[finished]] = t1[finished]
-        t2 = tasks2 = None
-        if st2.triggered:
-            tasks2 = st2.scheme.copies_per_worker
-            t2 = self.time_model.sample(st2.active_workers, tasks2,
-                                        self._rng)
-            ready[st2.active_workers] = np.where(
-                np.isfinite(t2), stage1_time + t2, np.inf)
+
+        with self._span("stage2", epoch=epoch):
+            s_hat = self.predictor.predict_s(
+                n_active=M - int(finished.sum()), s_min=1)
+            st2 = self.planner.plan_stage2(st1, finished, s_hat, speeds)
+            t2 = tasks2 = None
+            if st2.triggered:
+                tasks2 = st2.scheme.copies_per_worker
+                t2 = self.time_model.sample(st2.active_workers, tasks2,
+                                            self._rng)
+                ready[st2.active_workers] = np.where(
+                    np.isfinite(t2), stage1_time + t2, np.inf)
         return ComputePhase(
             epoch=epoch, st1=st1, st2=st2, t1=t1, tasks1=tasks1,
             finished=finished, T_comp=T_comp, stage1_time=stage1_time,

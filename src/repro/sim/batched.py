@@ -47,6 +47,8 @@ from repro.sim.cluster import (CommJob, CommStats, EdgeCluster,
                                arrived_mask, stuck_tolerance)
 from repro.sim.scenarios import resolve_scenario
 from repro.sim.spec import build_cluster
+from repro.telemetry.compilation import note_compile
+from repro.telemetry.recorder import FleetRecorder, phase_span
 
 __all__ = ["BatchedFleet", "run_fleet_batched", "MIN_CHUNK",
            "pick_chunk", "scan_trace_count", "reset_scan_compile_cache"]
@@ -121,13 +123,18 @@ def reset_scan_compile_cache() -> None:
 # compiled scan chunk
 # --------------------------------------------------------------------- #
 @lru_cache(maxsize=64)
-def _chunk_runner(channel_step, S: int, M: int):
+def _chunk_runner(channel_step, S: int, M: int, telemetry: bool = False):
     """Jitted ``lax.scan`` over one chunk of slots for an (S, M) fleet.
 
     ``channel_step`` is the channel class's pure ``step_batched`` for
     stateful channels, or ``None`` for stateless ones (their rate rows then
     arrive precomputed through ``xs["r"]``) — so every static/trace fleet
     of the same shape shares one compilation.
+
+    ``telemetry`` adds the virtual admission queue ``H`` to the stacked
+    scan outputs (the one per-slot series the stop tracker does not
+    already need).  It is part of the cache key, so the off path traces
+    the exact pre-telemetry computation — the zero-cost-off contract.
     """
     stateful = channel_step is not None
 
@@ -135,6 +142,7 @@ def _chunk_runner(channel_step, S: int, M: int):
         # executes only while jax traces, i.e. once per compilation
         global _scan_traces
         _scan_traces += 1
+        note_compile("comm_scan")
         sysp, gb, L, visible, chp = consts
         zeros = jnp.zeros((S, M), jnp.float32)
 
@@ -155,6 +163,8 @@ def _chunk_runner(channel_step, S: int, M: int):
             pending = pending - jnp.minimum(pending, dec.d)
             out = {"d": dec.d, "c": dec.c, "Q": state.Q, "E": state.E,
                    "pend": pending, "e_up": dec.e_up, "e_com": dec.e_com}
+            if telemetry:
+                out["H"] = state.H
             return (state, pending, ch_state), out
 
         return jax.lax.scan(body, carry, xs)
@@ -290,10 +300,19 @@ class _StopTracker:
 # --------------------------------------------------------------------- #
 # batched comm phase
 # --------------------------------------------------------------------- #
+#: chunk-scan output name per telemetry series field (``H`` only exists
+#: in telemetry-enabled traces; the rest double as stop-tracker inputs)
+_SERIES_OUT = {"Q": "Q", "H": "H", "E": "E", "admitted": "d",
+               "transmitted": "c", "pending": "pend"}
+
+
 def _batched_comm(clusters: Sequence[EdgeCluster],
                   jobs: Sequence[CommJob],
-                  chunk: Optional[int] = None) -> List[CommStats]:
+                  chunk: Optional[int] = None, *,
+                  telemetry: Optional[FleetRecorder] = None,
+                  epoch: int = 0) -> List[CommStats]:
     c0 = clusters[0]
+    series = telemetry is not None and telemetry.wants_series
     chunk = int(chunk or TAPE_BLOCK)
     S, M, cp = len(clusters), c0.M, c0.comm
     T = cp.slot_T
@@ -312,7 +331,7 @@ def _batched_comm(clusters: Sequence[EdgeCluster],
                       cp.harvest_jitter) for c in clusters]
 
     runner = _chunk_runner(type(chan).step_batched if stateful else None,
-                           S, M)
+                           S, M, series)
     consts = (c0.sys_params,
               jnp.asarray(c0.grad_bytes, jnp.float32),
               c0._L,
@@ -331,6 +350,7 @@ def _batched_comm(clusters: Sequence[EdgeCluster],
     carry = (state, z, ch_state)
 
     tracker = _StopTracker(jobs, clusters, visible, grid_len)
+    blocks: List[dict] = []        # raw chunk outputs for series slicing
     zero_rows = np.zeros((chunk, M))
     n_chunks = -(-grid_len // chunk)
     for b in range(n_chunks):
@@ -367,8 +387,21 @@ def _batched_comm(clusters: Sequence[EdgeCluster],
                 chan.rates_for_slots(np.arange(k0, k0 + chunk)),
                 jnp.float32)
         carry, outs = runner(carry, xs, consts)
-        tracker.consume(k0, jax.tree.map(np.asarray, outs))
-    return tracker.finalize()
+        outs_np = jax.tree.map(np.asarray, outs)
+        tracker.consume(k0, outs_np)
+        if series:
+            blocks.append(outs_np)
+    stats = tracker.finalize()
+    if series:
+        # one vectorized slice per lane: concatenate the chunk blocks
+        # along the slot axis, then trim each lane to its own stop slot
+        stacked = {f: np.concatenate([b[out] for b in blocks])
+                   for f, out in _SERIES_OUT.items()}
+        for lane, st in enumerate(stats):
+            telemetry.record_comm_series(
+                lane, epoch, n_slots=st.n_slots,
+                **{f: arr[:st.n_slots, lane] for f, arr in stacked.items()})
+    return stats
 
 
 # --------------------------------------------------------------------- #
@@ -408,6 +441,7 @@ class BatchedFleet:
                  scheme: str = "two-stage", seeds: Sequence[int] = (0,),
                  *, clusters: Optional[Sequence[EdgeCluster]] = None,
                  compute: str = "batched", chunk: Optional[int] = None,
+                 telemetry: Optional[FleetRecorder] = None,
                  **overrides):
         if clusters is None:
             if scenario is None:
@@ -446,6 +480,13 @@ class BatchedFleet:
                     "grad_bytes); sweep heterogeneous grids as separate "
                     "fleets")
         self.clusters = clusters
+        self.telemetry = telemetry
+        if telemetry:
+            # host-path compute phases (compute="host") emit per-lane
+            # stage-1/stage-2 spans through the runtime's own hook
+            for lane, c in enumerate(clusters):
+                c.telemetry_lane = lane
+                c.telemetry = telemetry
         if chunk is None:
             chunk = pick_chunk(clusters)
         else:
@@ -463,12 +504,21 @@ class BatchedFleet:
 
     def run_epoch(self, epoch: int) -> List[EpochResult]:
         """One batched epoch → per-seed :class:`EpochResult` list."""
-        if self.compute == "batched":
-            jobs = batched_comm_jobs(self.clusters, epoch)
-        else:
-            jobs = [c.comm_job(epoch) for c in self.clusters]
-        stats = _batched_comm(self.clusters, jobs, self.chunk)
-        return [job.assemble(st) for job, st in zip(jobs, stats)]
+        rec = self.telemetry
+        with phase_span(rec, "compute_phase", epoch=epoch):
+            if self.compute == "batched":
+                jobs = batched_comm_jobs(self.clusters, epoch)
+            else:
+                jobs = [c.comm_job(epoch) for c in self.clusters]
+        with phase_span(rec, "comm", epoch=epoch):
+            stats = _batched_comm(self.clusters, jobs, self.chunk,
+                                  telemetry=rec, epoch=epoch)
+        with phase_span(rec, "decode", epoch=epoch):
+            results = [job.assemble(st) for job, st in zip(jobs, stats)]
+        if rec:
+            for lane, res in enumerate(results):
+                rec.record_epoch(lane, epoch, res)
+        return results
 
     def run(self, n_epochs: int) -> List[List[EpochResult]]:
         """``n_epochs`` batched epochs → results indexed [epoch][seed]."""

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Callable, Optional
 
 import jax
@@ -46,6 +47,7 @@ from repro.core.runtime import (EpochResult, build_epoch_backend,
                                 single_stage_accounting)
 from repro.sim.channel import ChannelModel, CommTape, StaticChannel
 from repro.sim.events import COMPUTE_DONE, SLOT_TICK, EventEngine
+from repro.telemetry.recorder import FleetRecorder, phase_span
 
 __all__ = ["CommJob", "CommParams", "CommStats", "EdgeCluster",
            "arrived_mask", "stuck_tolerance"]
@@ -153,6 +155,21 @@ class CommStats:
     final_energy: np.ndarray       # (M,)              never overspends
     idle_slots: int                # slots with no admission/transmission
 
+    def __post_init__(self):
+        # opt-in debug guard: the conservation invariant above is cheap to
+        # check at construction but sits on the fleet hot path, so it only
+        # runs when REPRO_DEBUG is set (any non-empty value) — mirroring
+        # the tolerance the test suite pins it at.
+        if os.environ.get("REPRO_DEBUG"):
+            admitted = np.asarray(self.bytes_admitted, np.float64)
+            drained = (np.asarray(self.bytes_transmitted, np.float64)
+                       + np.asarray(self.queue_residual, np.float64))
+            if not np.allclose(admitted, drained, rtol=1e-4, atol=1e-5):
+                raise AssertionError(
+                    f"CommStats conservation violated: bytes_admitted="
+                    f"{admitted} != bytes_transmitted + queue_residual="
+                    f"{drained}")
+
 
 class EdgeCluster:
     """One (scheme × scenario) co-simulated edge cluster.
@@ -183,6 +200,8 @@ class EdgeCluster:
             raise ValueError(f"channel has {self.channel.M} workers, "
                              f"cluster has {M}")
         self.engine = EventEngine(seed)
+        self._telemetry: Optional[FleetRecorder] = None
+        self._telemetry_lane = 0
         rates = np.asarray(rates if rates is not None else np.ones(M),
                            np.float64)
         self.rates = rates
@@ -202,6 +221,32 @@ class EdgeCluster:
         self.sys_params, self._L, self._zeros = _shared_jnp_consts(
             M, cp.slot_T, cp.tx_power, cp.delta, cp.xi, cp.f_max, cp.F,
             cp.E_cap, cp.V, cp.n_subchannels)
+
+    # -- telemetry plumbing (DESIGN.md §3.9) --------------------------- #
+    @property
+    def telemetry(self) -> Optional[FleetRecorder]:
+        """Recorder observing this cluster (``None`` ⟹ telemetry off —
+        the zero-cost default).  Propagates to the two-stage runtime so
+        its stage-1/stage-2 spans land in the same recorder."""
+        return self._telemetry
+
+    @telemetry.setter
+    def telemetry(self, rec: Optional[FleetRecorder]) -> None:
+        self._telemetry = rec
+        if self.runtime is not None:
+            self.runtime.telemetry = rec
+            self.runtime.telemetry_lane = self._telemetry_lane
+
+    @property
+    def telemetry_lane(self) -> int:
+        """This cluster's lane index inside the recorded fleet."""
+        return self._telemetry_lane
+
+    @telemetry_lane.setter
+    def telemetry_lane(self, lane: int) -> None:
+        self._telemetry_lane = int(lane)
+        if self.runtime is not None:
+            self.runtime.telemetry_lane = int(lane)
 
     def _slot_fn(self, state, obs):
         # SystemParams is a registered pytree, so this shares one compiled
@@ -288,9 +333,17 @@ class EdgeCluster:
     # ------------------------------------------------------------------ #
     def run_epoch(self, epoch: int) -> EpochResult:
         """One co-simulated epoch: compute → scheduled uplink → decode."""
-        job = self.comm_job(epoch)
-        stats = self._run_comm(job.ready_time, job.is_decodable)
-        return job.assemble(stats)
+        rec, lane = self._telemetry, self._telemetry_lane
+        with phase_span(rec, "compute_phase", epoch=epoch, lane=lane):
+            job = self.comm_job(epoch)
+        with phase_span(rec, "comm", epoch=epoch, lane=lane):
+            stats = self._run_comm(job.ready_time, job.is_decodable,
+                                   epoch=epoch)
+        with phase_span(rec, "decode", epoch=epoch, lane=lane):
+            result = job.assemble(stats)
+        if rec:
+            rec.record_epoch(lane, epoch, result)
+        return result
 
     # ------------------------------------------------------------------ #
     def _static_result(self, scheme: CodingScheme, t: np.ndarray,
@@ -324,11 +377,16 @@ class EdgeCluster:
 
     # ------------------------------------------------------------------ #
     def _run_comm(self, ready_time: np.ndarray,
-                  is_decodable: Callable[[np.ndarray], bool]) -> CommStats:
+                  is_decodable: Callable[[np.ndarray], bool],
+                  *, epoch: int = 0) -> CommStats:
         """Drain gradient payloads through the Lyapunov scheduler slot by
         slot until the decodable set has arrived (or progress is provably
         impossible / the slot cap fires)."""
         M, cp, eng = self.M, self.comm, self.engine
+        rec = self._telemetry
+        series = (rec.wants_series if rec is not None else False)
+        rows = {f: [] for f in ("Q", "H", "E", "admitted", "transmitted",
+                                "pending")} if series else None
         T = cp.slot_T
         eng.clear()
         eng.reset_clock()
@@ -394,6 +452,15 @@ class EdgeCluster:
             n_slots = k + 1
             if float(d.sum()) <= 0 and float(c.sum()) <= 0:
                 idle_slots += 1
+            if series:
+                # post-step state + this slot's decisions, in the same
+                # float32 the batched scan stacks — the parity contract
+                rows["Q"].append(np.asarray(state.Q, np.float32))
+                rows["H"].append(np.asarray(state.H, np.float32))
+                rows["E"].append(np.asarray(state.E, np.float32))
+                rows["admitted"].append(np.asarray(dec.d, np.float32))
+                rows["transmitted"].append(np.asarray(dec.c, np.float32))
+                rows["pending"].append(pending.copy())
 
             arrived = arrived_mask(owed, delivered)
             if is_decodable(arrived):
@@ -415,6 +482,11 @@ class EdgeCluster:
             eng.schedule((k + 1) * T, SLOT_TICK, k + 1)
 
         eng.clear()                              # drop unneeded computes
+        if series:
+            rec.record_comm_series(
+                self._telemetry_lane, epoch, n_slots=n_slots,
+                **{f: (np.stack(v) if v else np.zeros((0, M), np.float32))
+                   for f, v in rows.items()})
         return CommStats(
             n_slots=n_slots, decode_time=decode_time, decode_ok=decode_ok,
             arrived=arrived, bytes_offered=owed.copy(),

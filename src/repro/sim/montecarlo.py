@@ -26,6 +26,8 @@ from repro.sim.batched import BatchedFleet
 from repro.sim.cluster import SCHEMES
 from repro.sim.scenarios import resolve_scenario
 from repro.sim.spec import ExperimentSpec, build_cluster, fleet_seeds
+from repro.telemetry.metrics import fleet_fairness, mean_queue_residual
+from repro.telemetry.recorder import FleetRecorder
 
 __all__ = ["FleetSummary", "run_fleet", "run_experiment",
            "compare_schemes", "ENGINES"]
@@ -55,6 +57,10 @@ class FleetSummary:
     mean_slots: float          # comm slots per epoch
     decode_failure_rate: float
     mean_stragglers: float
+    # telemetry-derived fleet-health columns (repro.telemetry.metrics);
+    # trailing defaults keep older positional constructions working
+    jain_fairness: float = 1.0       # Jain index over admitted bytes
+    mean_queue_residual: float = 0.0  # mean end-of-epoch Q_m backlog
 
     def row(self) -> str:
         return (f"{self.scenario:<30s} {self.scheme:<10s} "
@@ -63,7 +69,8 @@ class FleetSummary:
                 f"comm={self.mean_comm_time:6.3f} "
                 f"{100 * self.comm_fraction:4.1f}%) "
                 f"p95={self.p95_time:6.3f} slots={self.mean_slots:5.1f} "
-                f"fail={self.decode_failure_rate:.2f}")
+                f"fail={self.decode_failure_rate:.2f} "
+                f"jain={self.jain_fairness:.3f}")
 
 
 def summarize_fleet(scenario: str, scheme: str, n_seeds: int,
@@ -98,12 +105,16 @@ def summarize_fleet(scenario: str, scheme: str, n_seeds: int,
         mean_utilization=float(np.mean(util)),
         mean_slots=float(np.mean(slots)),
         decode_failure_rate=failures / max(len(results), 1),
-        mean_stragglers=float(np.mean(strag)))
+        mean_stragglers=float(np.mean(strag)),
+        jain_fairness=fleet_fairness(results),
+        mean_queue_residual=mean_queue_residual(results))
 
 
 def run_fleet(scenario, scheme: str = "two-stage", *,
               n_seeds: int = 8, n_epochs: int = 3, base_seed: int = 0,
-              engine: str = "batched", **overrides) -> FleetSummary:
+              engine: str = "batched",
+              telemetry: Optional[FleetRecorder] = None,
+              **overrides) -> FleetSummary:
     """Monte-Carlo fleet: ``n_seeds`` clusters × ``n_epochs`` epochs.
 
     ``scenario`` is a :class:`~repro.sim.spec.ScenarioSpec` (registry
@@ -114,6 +125,11 @@ def run_fleet(scenario, scheme: str = "two-stage", *,
     (per-seed host compute loop); ``engine="oracle"`` runs each seed
     through the event-driven reference loop.  Same seeds, same tapes,
     same results.
+
+    ``telemetry`` optionally threads a
+    :class:`~repro.telemetry.recorder.FleetRecorder` through whichever
+    engine runs (per-slot series, phase spans, epoch events); ``None``
+    (default) takes the exact telemetry-free code path.
     """
     if n_seeds < 1 or n_epochs < 1:
         raise ValueError(f"need n_seeds >= 1 and n_epochs >= 1, got "
@@ -124,13 +140,17 @@ def run_fleet(scenario, scheme: str = "two-stage", *,
     seeds = fleet_seeds(n_seeds, base_seed)
     results: List[EpochResult] = []
     if engine == "oracle":
-        for s in seeds:
+        for lane, s in enumerate(seeds):
             cluster = build_cluster(spec, scheme, s)
+            if telemetry is not None:
+                cluster.telemetry_lane = lane
+                cluster.telemetry = telemetry
             results.extend(cluster.run_epoch(e) for e in range(n_epochs))
     else:
         fleet = BatchedFleet(spec, scheme, seeds,
                              compute=("host" if engine == "hybrid"
-                                      else "batched"))
+                                      else "batched"),
+                             telemetry=telemetry)
         per_epoch = fleet.run(n_epochs)                    # [epoch][seed]
         # seed-major order, matching the oracle loop, so both engines feed
         # the summary reductions identically (bitwise-equal summaries)

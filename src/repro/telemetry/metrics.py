@@ -1,0 +1,116 @@
+"""Pure derived telemetry metrics (numpy only, no engine imports).
+
+The paper's headline claims are *time-series* claims — fairness of the
+perturbed-Lyapunov admission protocol (paper §4) and resource utilization
+of two-stage coding (paper §3) — so the raw per-slot series the recorder
+collects (``Q``/``H``/``E``/admissions/transmissions, DESIGN.md §3.9)
+need standard reductions before they gate anything:
+
+  * :func:`jain_index` — Jain's fairness index over per-worker totals,
+    the metric the Lyapunov admission protocol is supposed to keep near 1;
+  * :func:`queue_stability_drift` — least-squares slope of the total
+    backlog over slots; a stable queue system drifts ≈ 0, a positive
+    slope is the signature of an unstable admission policy;
+  * :func:`straggler_rate_ewma` — the exponentially-weighted straggler
+    rate adaptive-redundancy schemes key their ``s`` on (Adaptive
+    Gradient Coding, arXiv:2006.04845);
+  * :func:`fleet_fairness` / :func:`mean_queue_residual` — the
+    :class:`~repro.sim.montecarlo.FleetSummary` columns, reduced from a
+    fleet's :class:`~repro.sim.cluster.CommStats` ledgers.
+
+Everything here is a pure function of arrays/results — no recorder, no
+clock, no engine state — so the same reductions serve live summaries,
+JSONL post-processing and regression bounds.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import numpy as np
+
+__all__ = ["jain_index", "queue_stability_drift", "straggler_rate_ewma",
+           "fleet_fairness", "mean_queue_residual", "comm_stats_of"]
+
+
+def jain_index(x) -> float:
+    """Jain's fairness index ``(Σx)² / (n·Σx²)`` of a non-negative share
+    vector.
+
+    Lies in ``(0, 1]`` whenever some share is positive: 1 ⟺ all shares
+    equal, 1/n when one worker gets everything.  The degenerate all-zero
+    (or empty) allocation returns 1.0 by convention — nobody received
+    anything, which is vacuously fair and keeps the metric total.
+    Negative shares are a caller bug and raise.
+    """
+    x = np.asarray(x, np.float64).ravel()
+    if x.size and (x < 0).any():
+        raise ValueError("jain_index wants non-negative shares")
+    total = x.sum()
+    if x.size == 0 or total <= 0.0:
+        return 1.0
+    return float(total * total / (x.size * np.square(x).sum()))
+
+
+def queue_stability_drift(q_series: np.ndarray) -> float:
+    """Least-squares slope (bytes/slot) of the total backlog ``ΣQ_m(t)``.
+
+    ``q_series`` is the recorder's ``(n_slots, M)`` per-slot backlog
+    series (or an already-summed ``(n_slots,)`` vector).  A
+    drift-plus-penalty policy keeping its queues strongly stable shows a
+    drift ≈ 0 over a long horizon; a persistently positive slope means
+    admissions outrun the uplink — the queue-stability regression bound
+    the ROADMAP's scheduler-soak item gates on.  Series shorter than two
+    slots have no measurable drift and return 0.0.
+    """
+    q = np.asarray(q_series, np.float64)
+    if q.ndim == 2:
+        q = q.sum(axis=1)
+    if q.size < 2:
+        return 0.0
+    slots = np.arange(q.size, dtype=np.float64)
+    return float(np.polyfit(slots, q, 1)[0])
+
+
+def straggler_rate_ewma(counts: Sequence[float], alpha: float = 0.3,
+                        ) -> np.ndarray:
+    """EWMA of a per-epoch straggler-count series (``alpha`` = weight of
+    the newest observation).  Returns the full smoothed series so both
+    the live estimate (last element) and its trajectory are available."""
+    if not 0.0 < alpha <= 1.0:
+        raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+    c = np.asarray(counts, np.float64).ravel()
+    out = np.empty_like(c)
+    acc = 0.0
+    for i, v in enumerate(c):
+        acc = v if i == 0 else (1.0 - alpha) * acc + alpha * v
+        out[i] = acc
+    return out
+
+
+def comm_stats_of(results: Iterable) -> list:
+    """The non-None ``.comm`` ledgers of an epoch-result iterable
+    (instant-uplink results carry no comm phase and are skipped)."""
+    return [r.comm for r in results if getattr(r, "comm", None) is not None]
+
+
+def fleet_fairness(results: Iterable) -> float:
+    """Jain index of per-worker bytes admitted, totalled across every
+    epoch result in the fleet — the FleetSummary fairness column.  A
+    fleet with no comm phases is vacuously fair (1.0)."""
+    stats = comm_stats_of(results)
+    if not stats:
+        return 1.0
+    per_worker = np.sum([np.asarray(s.bytes_admitted, np.float64)
+                         for s in stats], axis=0)
+    return jain_index(per_worker)
+
+
+def mean_queue_residual(results: Iterable) -> float:
+    """Mean leftover per-worker backlog ``Q_m`` at epoch end (bytes),
+    averaged over workers and epochs — the FleetSummary backlog column.
+    0 for fleets with no comm phases."""
+    stats = comm_stats_of(results)
+    if not stats:
+        return 0.0
+    return float(np.mean([np.mean(np.asarray(s.queue_residual, np.float64))
+                          for s in stats]))

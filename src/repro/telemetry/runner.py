@@ -1,0 +1,63 @@
+"""High-level "record a fleet" entry point.
+
+Wires a :class:`~repro.telemetry.recorder.FleetRecorder` through either
+co-sim engine and returns both the epoch results and the populated
+recorder — the one-call path behind ``examples/telemetry_walkthrough.py``
+and the CI sample-trace artifact.  Kept out of ``repro.telemetry``'s
+import graph proper (it imports the simulator; the rest of the package is
+engine-free and is itself imported *by* the simulator).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.telemetry.recorder import FleetRecorder, TelemetryConfig
+
+__all__ = ["record_fleet"]
+
+
+def record_fleet(scenario, scheme: str = "two-stage", *,
+                 seeds: Sequence[int] = (0, 1, 2, 3), n_epochs: int = 2,
+                 engine: str = "batched",
+                 config: Optional[TelemetryConfig] = None,
+                 sinks: Sequence = (),
+                 ) -> Tuple[List[List], FleetRecorder]:
+    """Run one (scenario × scheme) fleet with telemetry on.
+
+    Returns ``(results, recorder)`` with ``results[epoch][lane]`` the
+    per-epoch :class:`~repro.core.runtime.EpochResult` lists and the
+    recorder holding per-slot series, phase spans, epoch events and the
+    compile delta; ``sinks`` (e.g. a
+    :class:`~repro.telemetry.sinks.JsonlSink`) receive the flushed event
+    stream before returning.  ``engine`` is any of
+    :data:`repro.sim.montecarlo.ENGINES` — the oracle path records the
+    identical series slot by slot (the parity contract).
+    """
+    from repro.sim.batched import BatchedFleet
+    from repro.sim.montecarlo import ENGINES
+    from repro.sim.scenarios import resolve_scenario
+    from repro.sim.spec import build_cluster
+
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    spec = resolve_scenario(scenario, warn_string=True)
+    rec = FleetRecorder(config or TelemetryConfig())
+    rec.set_meta(scenario=spec.name, scheme=scheme, engine=engine,
+                 n_seeds=len(seeds), n_epochs=int(n_epochs))
+
+    if engine == "oracle":
+        clusters = []
+        for lane, seed in enumerate(seeds):
+            c = build_cluster(spec, scheme, int(seed))
+            c.telemetry_lane = lane
+            c.telemetry = rec
+            clusters.append(c)
+        results = [[c.run_epoch(e) for c in clusters]
+                   for e in range(n_epochs)]
+    else:
+        fleet = BatchedFleet(spec, scheme, seeds, telemetry=rec,
+                             compute=("host" if engine == "hybrid"
+                                      else "batched"))
+        results = fleet.run(n_epochs)
+    rec.flush(*sinks)
+    return results, rec

@@ -17,6 +17,12 @@ FLEET = {
             "speedup": 7.5, "speedup_vs_hybrid": 2.0,
         },
     },
+    "telemetry": {
+        "scenario": "homogeneous", "n_seeds": 64, "n_epochs": 1,
+        "disabled": {"seconds": 0.10, "seed_epochs_per_sec": 640.0},
+        "enabled": {"seconds": 0.102, "seed_epochs_per_sec": 627.5},
+        "throughput_ratio": 0.98,
+    },
 }
 GRID = {
     "grouped": {"seconds": 1.0, "cells_per_sec": 40.0},
@@ -99,6 +105,29 @@ def test_gate_reports_new_metric_without_failing(bench_dir, capsys):
     (bench_dir / "BENCH_fleet.json").write_text(json.dumps(grown))
     assert main(_argv(bench_dir)) == 0
     assert "no baseline yet" in capsys.readouterr().out
+
+
+def test_telemetry_overhead_gate_trips_below_floor(bench_dir, capsys):
+    """An enabled/disabled throughput ratio under the absolute floor must
+    fail even though every baseline-relative metric is unchanged."""
+    slow = copy.deepcopy(FLEET)
+    slow["telemetry"]["throughput_ratio"] = 0.90       # 10% overhead
+    (bench_dir / "BENCH_fleet.json").write_text(json.dumps(slow))
+    assert main(_argv(bench_dir)) == 1
+    assert "FAIL telemetry overhead" in capsys.readouterr().out
+    # a relaxed floor clears the same artifact
+    assert main(_argv(bench_dir, ["--telemetry-floor", "0.85"])) == 0
+
+
+def test_telemetry_overhead_gate_fails_on_missing_section(bench_dir,
+                                                          capsys):
+    """Dropping the telemetry section must not turn the overhead budget
+    into a silent no-op."""
+    bare = copy.deepcopy(FLEET)
+    del bare["telemetry"]
+    (bench_dir / "BENCH_fleet.json").write_text(json.dumps(bare))
+    assert main(_argv(bench_dir)) == 1
+    assert "no 'telemetry' section" in capsys.readouterr().out
 
 
 def test_missing_artifacts_is_a_usage_error(tmp_path):

@@ -1,0 +1,309 @@
+"""Fleet telemetry subsystem (DESIGN.md §3.9).
+
+Three contracts pinned here:
+
+  * **parity** — with telemetry on, the event-driven oracle and the
+    batched scan record identical per-slot series (Q/H/E, admissions,
+    transmissions, pending) on every registry scenario × scheme;
+  * **zero-cost off** — threading a recorder (enabled or disabled)
+    through an engine leaves every epoch result bit-identical to the
+    telemetry-free run;
+  * **accounting** — compile counters, phase spans, epoch events, sinks,
+    the report CLI and the Chrome-trace export are internally consistent.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.sim import (BatchedFleet, available_scenarios, build_cluster,
+                       run_fleet, scenario_spec)
+from repro.sim.cluster import SCHEMES, CommStats
+from repro.telemetry import (SERIES_FIELDS, FleetRecorder, JsonlSink,
+                             MemorySink, TelemetryConfig,
+                             chrome_trace_events, compile_counts,
+                             jain_index, queue_stability_drift,
+                             record_fleet, straggler_rate_ewma,
+                             write_chrome_trace)
+from repro.telemetry.report import fleet_table, load_runs, run_row
+
+SEEDS = (0, 101)
+N_EPOCHS = 2
+
+
+# --------------------------------------------------------------------- #
+# per-slot series parity: oracle vs batched on the full registry
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("scenario", available_scenarios())
+def test_series_parity_oracle_vs_batched(scenario, scheme):
+    spec = scenario_spec(scenario)
+    rec_b = FleetRecorder()
+    BatchedFleet(spec, scheme, SEEDS, telemetry=rec_b).run(N_EPOCHS)
+    rec_o = FleetRecorder()
+    for lane, seed in enumerate(SEEDS):
+        c = build_cluster(spec, scheme, seed)
+        c.telemetry_lane = lane
+        c.telemetry = rec_o
+        for e in range(N_EPOCHS):
+            c.run_epoch(e)
+    assert rec_b.series_keys() == rec_o.series_keys() == [
+        (lane, e) for lane in range(len(SEEDS)) for e in range(N_EPOCHS)]
+    for key in rec_b.series_keys():
+        sb, so = rec_b.comm_series(*key), rec_o.comm_series(*key)
+        for f in SERIES_FIELDS:
+            assert sb[f].shape == so[f].shape, (key, f)
+            np.testing.assert_allclose(
+                sb[f], so[f], rtol=1e-6, atol=1e-7,
+                err_msg=f"{scenario}/{scheme} lane,epoch={key} field={f}")
+
+
+def test_series_rows_match_ledger_totals():
+    """Summing the admitted/transmitted series over slots must reproduce
+    the CommStats byte ledgers, and Q's last row the queue residual."""
+    results, rec = record_fleet(scenario_spec("saturated-uplink"),
+                                seeds=SEEDS, n_epochs=1)
+    for lane in range(len(SEEDS)):
+        s = rec.comm_series(lane, 0)
+        comm = results[0][lane].comm
+        assert s["Q"].shape == (comm.n_slots, comm.bytes_admitted.size)
+        np.testing.assert_allclose(s["admitted"].sum(0),
+                                   comm.bytes_admitted, rtol=1e-5)
+        np.testing.assert_allclose(s["transmitted"].sum(0),
+                                   comm.bytes_transmitted, rtol=1e-5)
+        np.testing.assert_allclose(s["Q"][-1], comm.queue_residual,
+                                   rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# zero-cost off switch: bit-identical results, no stray series
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine", ["batched", "oracle"])
+def test_results_bit_identical_with_and_without_telemetry(engine):
+    spec = scenario_spec("fading-uplink")
+
+    def run(telemetry):
+        if engine == "batched":
+            return BatchedFleet(spec, "two-stage", SEEDS,
+                                telemetry=telemetry).run(N_EPOCHS)
+        out = []
+        for lane, seed in enumerate(SEEDS):
+            c = build_cluster(spec, "two-stage", seed)
+            if telemetry is not None:
+                c.telemetry_lane = lane
+                c.telemetry = telemetry
+            out.append([c.run_epoch(e) for e in range(N_EPOCHS)])
+        return out
+
+    base = run(None)
+    on = run(FleetRecorder())
+    off = run(FleetRecorder(TelemetryConfig(enabled=False)))
+    flat = lambda rows: [r for row in rows for r in  # noqa: E731
+                         (row if isinstance(row, list) else [row])]
+    for rb, ron, roff in zip(flat(base), flat(on), flat(off)):
+        for r2 in (ron, roff):
+            assert r2.time == rb.time
+            assert r2.decode_ok == rb.decode_ok
+            assert r2.comm.n_slots == rb.comm.n_slots
+            np.testing.assert_array_equal(r2.comm.bytes_admitted,
+                                          rb.comm.bytes_admitted)
+            np.testing.assert_array_equal(r2.comm.queue_residual,
+                                          rb.comm.queue_residual)
+
+
+def test_disabled_recorder_collects_nothing():
+    rec = FleetRecorder(TelemetryConfig(enabled=False))
+    BatchedFleet(scenario_spec("homogeneous"), "two-stage", SEEDS,
+                 telemetry=rec).run(1)
+    assert not rec
+    assert rec.series_keys() == []
+    assert rec.spans == []
+    assert rec.epoch_events() == []
+
+
+# --------------------------------------------------------------------- #
+# spans, epoch events, compile accounting
+# --------------------------------------------------------------------- #
+def test_spans_and_epoch_events_cover_the_run():
+    results, rec = record_fleet(scenario_spec("homogeneous"), seeds=SEEDS,
+                                n_epochs=N_EPOCHS, engine="hybrid")
+    names = {s.name for s in rec.spans}
+    # fleet-level phases plus the runtime's per-lane stage spans
+    assert {"compute_phase", "comm", "decode",
+            "stage1", "stage2"} <= names
+    assert all(s.t1 >= s.t0 for s in rec.spans)
+    events = rec.epoch_events()
+    assert len(events) == len(SEEDS) * N_EPOCHS
+    for ev, res in zip(events,
+                       [r for e in range(N_EPOCHS) for r in results[e]]):
+        assert ev["decode_ok"] == res.decode_ok
+        assert ev["n_slots"] == res.comm.n_slots
+        assert ev["bytes_admitted"] == pytest.approx(
+            list(res.comm.bytes_admitted))
+
+
+def test_compile_accounting_names_both_sites():
+    from repro.sim.batched import reset_scan_compile_cache
+    reset_scan_compile_cache()
+    before = compile_counts()
+    _, rec = record_fleet(scenario_spec("homogeneous"), seeds=(0,),
+                          n_epochs=1)
+    delta = rec.compile_delta()
+    assert delta.get("comm_scan", 0) >= 1
+    after = compile_counts()
+    assert after["comm_scan"] >= before.get("comm_scan", 0) + 1
+    # schedule_slot is the scan body's kernel: traced at least whenever
+    # the comm scan is (the oracle's per-cluster jit also notes it)
+    assert after.get("schedule_slot", 0) >= before.get("schedule_slot", 0)
+
+
+# --------------------------------------------------------------------- #
+# derived metrics
+# --------------------------------------------------------------------- #
+def test_jain_index_known_values():
+    assert jain_index([1.0, 1.0, 1.0, 1.0]) == pytest.approx(1.0)
+    assert jain_index([1.0, 0.0, 0.0, 0.0]) == pytest.approx(0.25)
+    assert jain_index([]) == 1.0
+    assert jain_index([0.0, 0.0]) == 1.0
+    with pytest.raises(ValueError):
+        jain_index([1.0, -0.5])
+
+
+def test_jain_index_properties():
+    hypothesis = pytest.importorskip("hypothesis")
+    given, strategies = hypothesis.given, hypothesis.strategies
+
+    @given(strategies.lists(
+        strategies.floats(min_value=0.0, max_value=1e9,
+                          allow_nan=False, allow_infinity=False),
+        min_size=1, max_size=64))
+    def check(shares):
+        j = jain_index(shares)
+        assert 0.0 < j <= 1.0 + 1e-12
+        if len(set(shares)) == 1 and shares[0] > 0:
+            assert j == pytest.approx(1.0)   # symmetric ⟹ perfectly fair
+
+    check()
+
+
+def test_queue_stability_drift_slopes():
+    assert queue_stability_drift(np.zeros((50, 4))) == pytest.approx(0.0)
+    growing = np.outer(np.arange(30.0), np.ones(3))   # ΣQ grows 3/slot
+    assert queue_stability_drift(growing) == pytest.approx(3.0)
+    assert queue_stability_drift(np.ones((1, 4))) == 0.0
+
+
+def test_straggler_rate_ewma():
+    out = straggler_rate_ewma([4.0, 0.0, 0.0], alpha=0.5)
+    np.testing.assert_allclose(out, [4.0, 2.0, 1.0])
+    with pytest.raises(ValueError):
+        straggler_rate_ewma([1.0], alpha=0.0)
+
+
+def test_fleet_summary_gains_telemetry_columns():
+    s = run_fleet(scenario_spec("saturated-uplink"), "two-stage",
+                  n_seeds=2, n_epochs=1)
+    assert 0.0 < s.jain_fairness <= 1.0
+    assert s.mean_queue_residual >= 0.0
+    assert f"jain={s.jain_fairness:.3f}" in s.row()
+
+
+# --------------------------------------------------------------------- #
+# conservation invariant (REPRO_DEBUG)
+# --------------------------------------------------------------------- #
+def test_commstats_debug_conservation_guard(monkeypatch):
+    ok = dict(n_slots=1, decode_time=0.1, decode_ok=True,
+              arrived=np.ones(2, bool), bytes_offered=np.ones(2),
+              bytes_admitted=np.array([1.0, 1.0]),
+              bytes_transmitted=np.array([0.6, 1.0]),
+              queue_residual=np.array([0.4, 0.0]),
+              pending_residual=np.zeros(2), min_energy=1.0,
+              max_overdraft=0.0, final_energy=np.ones(2), idle_slots=0)
+    bad = dict(ok, queue_residual=np.array([0.0, 0.0]))
+    monkeypatch.delenv("REPRO_DEBUG", raising=False)
+    CommStats(**bad)                       # guard off: constructs fine
+    monkeypatch.setenv("REPRO_DEBUG", "1")
+    CommStats(**ok)
+    with pytest.raises(AssertionError, match="conservation"):
+        CommStats(**bad)
+
+
+def test_fleet_satisfies_conservation_under_debug(monkeypatch):
+    monkeypatch.setenv("REPRO_DEBUG", "1")
+    run_fleet(scenario_spec("saturated-uplink"), "two-stage",
+              n_seeds=2, n_epochs=1)       # must not raise
+
+
+# --------------------------------------------------------------------- #
+# sinks, report CLI, chrome trace
+# --------------------------------------------------------------------- #
+def test_jsonl_sink_report_roundtrip(tmp_path):
+    path = tmp_path / "telemetry.jsonl"
+    mem = MemorySink()
+    with JsonlSink(path) as sink:
+        _, rec = record_fleet(scenario_spec("saturated-uplink"),
+                              seeds=SEEDS, n_epochs=N_EPOCHS,
+                              sinks=(sink, mem))
+    assert sink.n_written == len(mem.events) > 0
+    runs = load_runs([str(path)])
+    assert len(runs) == 1
+    row = run_row(runs[0])
+    assert row["scenario"] == "saturated-uplink"
+    assert row["engine"] == "batched"
+    assert row["lanes"] == len(SEEDS)
+    assert row["epochs"] == len(SEEDS) * N_EPOCHS
+    assert 0.0 < row["fairness"] <= 1.0
+    table = fleet_table(runs)
+    assert "saturated-uplink" in table and "fairness" in table
+    # every line the sink wrote is valid JSON (JSONL contract)
+    for line in path.read_text().splitlines():
+        json.loads(line)
+
+
+def test_report_rejects_headerless_stream(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"type": "epoch", "lane": 0}\n')
+    with pytest.raises(ValueError, match="before any 'run' header"):
+        load_runs([str(p)])
+
+
+def test_chrome_trace_export(tmp_path):
+    _, rec = record_fleet(scenario_spec("homogeneous"), seeds=SEEDS,
+                          n_epochs=1, engine="oracle")
+    events = chrome_trace_events(rec)
+    complete = [e for e in events if e["ph"] == "X"]
+    assert complete and all(e["ts"] >= 0 and e["dur"] >= 0
+                            for e in complete)
+    tids = {e["tid"] for e in complete}
+    assert tids >= {1, 2}                  # one track per lane
+    path = write_chrome_trace(rec, str(tmp_path / "trace.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["traceEvents"] == json.loads(json.dumps(events))
+    assert doc["otherData"]["scenario"] == "homogeneous"
+
+
+# --------------------------------------------------------------------- #
+# recorder unit behaviour
+# --------------------------------------------------------------------- #
+def test_recorder_validates_series_fields():
+    rec = FleetRecorder()
+    good = {f: np.zeros((3, 2)) for f in SERIES_FIELDS}
+    rec.record_comm_series(0, 0, n_slots=2, **good)
+    assert rec.comm_series(0, 0)["Q"].shape == (2, 2)   # trimmed
+    with pytest.raises(ValueError, match="exactly"):
+        rec.record_comm_series(0, 1, n_slots=2,
+                               **{**good, "bogus": np.zeros((3, 2))})
+    with pytest.raises(ValueError, match="rows <"):
+        rec.record_comm_series(0, 1, n_slots=9, **good)
+
+
+def test_record_fleet_rejects_unknown_engine():
+    with pytest.raises(ValueError, match="engine"):
+        record_fleet(scenario_spec("homogeneous"), engine="warp-drive")
+
+
+def test_debug_env_is_string_gated():
+    """The REPRO_DEBUG gate treats any non-empty value as on."""
+    assert not os.environ.get("REPRO_DEBUG", "")
