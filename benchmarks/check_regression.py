@@ -28,6 +28,13 @@ baseline, and a missing section fails so the overhead check cannot
 silently drop out of CI.  ``--telemetry-floor`` / env
 ``TELEMETRY_OVERHEAD_FLOOR`` override it.
 
+The grid artifact's ``speedup`` (grouped / per-cell throughput) is
+likewise gated against an *absolute* floor (default 1.0): the
+compile-sharing sweep must never be slower than running its cells one
+by one, regardless of what any baseline recorded — the guard that keeps
+the grouping-regression fix from silently regressing again.
+``--grid-speedup-floor`` / env ``GRID_SPEEDUP_FLOOR`` override it.
+
     PYTHONPATH=src python -m benchmarks.check_regression            # gate
     PYTHONPATH=src python -m benchmarks.check_regression --update   # refresh
 
@@ -45,6 +52,9 @@ import sys
 DEFAULT_TOLERANCE = 0.30
 #: Absolute floor on enabled/disabled telemetry throughput (≤5% overhead).
 TELEMETRY_FLOOR = 0.95
+#: Absolute floor on grouped/per-cell grid-sweep throughput: the grouped
+#: path must never be slower than running the cells one by one.
+GRID_SPEEDUP_FLOOR = 1.0
 BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 
 
@@ -145,6 +155,26 @@ def check_telemetry_overhead(data: dict, floor: float) -> bool:
     return True
 
 
+def check_grid_speedup(data: dict, floor: float) -> bool:
+    """Gate the grid artifact's grouped/per-cell speedup against the
+    absolute ``floor``: compile-sharing must actually pay, not merely
+    track a (possibly already-regressed) baseline.  A missing metric
+    fails so the check cannot silently drop out of CI."""
+    if "speedup" not in data:
+        print("FAIL grid speedup: no 'speedup' field in the grid "
+              "artifact; run benchmarks.grid_sweep from this tree")
+        return False
+    speedup = float(data["speedup"])
+    if speedup < floor:
+        print(f"FAIL grid speedup: grouped/per-cell {speedup:.2f}x < "
+              f"floor {floor:.2f}x — the grouped sweep is slower than "
+              f"per-cell fleets")
+        return False
+    print(f"grid speedup: grouped/per-cell {speedup:.2f}x >= floor "
+          f"{floor:.2f}x")
+    return True
+
+
 def update_baseline(bench_path: str, baseline_path: str, extract,
                     note: str) -> None:
     metrics = extract(_load(bench_path))
@@ -176,6 +206,12 @@ def main(argv=None) -> int:
                     help="absolute floor on the telemetry enabled/disabled "
                          "throughput ratio (0.95 = at most 5%% overhead; "
                          "env TELEMETRY_OVERHEAD_FLOOR overrides)")
+    ap.add_argument("--grid-speedup-floor", type=float,
+                    default=float(os.environ.get(
+                        "GRID_SPEEDUP_FLOOR", GRID_SPEEDUP_FLOOR)),
+                    help="absolute floor on the grid-sweep grouped/"
+                         "per-cell speedup (1.0 = grouping must not lose; "
+                         "env GRID_SPEEDUP_FLOOR overrides)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baselines from the current artifacts")
     ap.add_argument("--note", default="refreshed via --update",
@@ -208,6 +244,7 @@ def main(argv=None) -> int:
             continue
         ok &= check_pair(bench, baseline, extract, args.tolerance)
     ok &= check_telemetry_overhead(_load(args.fleet), args.telemetry_floor)
+    ok &= check_grid_speedup(_load(args.grid), args.grid_speedup_floor)
     print("benchmark regression gate: " + ("PASS" if ok else "FAIL"))
     return 0 if ok else 1
 

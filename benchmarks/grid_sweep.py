@@ -1,13 +1,16 @@
 """Grid-sweep throughput: compile-sharing grouped sweep vs per-cell fleets.
 
-Builds a scenario × scheme grid of ``ExperimentSpec`` cells and measures
-cells/sec two ways: ``sweep()`` (physics-compatible cells stacked onto one
-``BatchedFleet`` per group, one scan compile per group) versus a host loop
-of per-cell ``run_fleet(engine="batched")`` calls (one fleet — and one
-fleet-shaped dispatch stream — per cell).  Both paths run identical seeds
-through identical randomness tapes and produce bit-identical
-``FleetSummary`` rows (enforced by ``tests/test_sweep.py``), so the
-comparison is work-for-work.
+Builds a sweep-shaped scenario × payload × scheme grid of
+``ExperimentSpec`` cells — the parameter-scan workload the structural
+grouping targets: many small cells whose comm physics differ only in
+per-lane values — and measures cells/sec two ways: ``sweep()``
+(structurally compatible cells stacked onto one ``BatchedFleet`` per
+group, one scan compile per group) versus a host loop of per-cell
+``run_fleet(engine="batched")`` calls (one fleet — and one fleet-shaped
+dispatch stream — per cell).  Both paths run identical seeds through
+identical randomness tapes and produce bit-identical ``FleetSummary``
+rows (enforced by ``tests/test_sweep.py``), so the comparison is
+work-for-work.
 
     PYTHONPATH=src python -m benchmarks.grid_sweep                # full
     PYTHONPATH=src python -m benchmarks.grid_sweep --smoke        # CI job
@@ -24,25 +27,35 @@ import json
 import platform
 import time
 
-FULL = dict(scenarios=["homogeneous", "bursty-stragglers",
-                       "heterogeneous-rates", "saturated-uplink"],
-            n_seeds=16, n_epochs=2)
-SMOKE = dict(scenarios=["homogeneous", "bursty-stragglers"],
-             n_seeds=8, n_epochs=1)
+#: ``None`` in the payload axis keeps the scenario's registry grad_bytes.
+SCENARIOS = ["homogeneous", "bursty-stragglers", "heterogeneous-rates",
+             "energy-harvesting-constrained"]
+FULL = dict(scenarios=SCENARIOS, payloads=[None, 0.5, 1.5, 2.0],
+            n_seeds=4, n_epochs=2)
+SMOKE = dict(scenarios=SCENARIOS, payloads=[None, 0.5, 1.5, 2.0],
+             n_seeds=1, n_epochs=1)
 
 
-def _grid(scenarios, n_seeds, n_epochs):
+def _grid(scenarios, payloads, n_seeds, n_epochs):
     from repro.sim import ExperimentSpec, scenario_spec
     from repro.sim.cluster import SCHEMES
-    return [ExperimentSpec(scenario=scenario_spec(name), scheme=scheme,
-                           n_seeds=n_seeds, n_epochs=n_epochs)
-            for name in scenarios for scheme in SCHEMES]
+    cells = []
+    for name in scenarios:
+        base = scenario_spec(name)
+        for gb in payloads:
+            sc = (base if gb is None else base.with_overrides(
+                name=f"{name}-gb{gb}", grad_bytes=gb))
+            cells.extend(
+                ExperimentSpec(scenario=sc, scheme=scheme,
+                               n_seeds=n_seeds, n_epochs=n_epochs)
+                for scheme in SCHEMES)
+    return cells
 
 
-def run_suite(scenarios, n_seeds: int, n_epochs: int) -> dict:
+def run_suite(scenarios, payloads, n_seeds: int, n_epochs: int) -> dict:
     from repro.sim import (plan_groups, reset_scan_compile_cache,
                            run_experiment, scan_trace_count, sweep)
-    grid = _grid(scenarios, n_seeds, n_epochs)
+    grid = _grid(scenarios, payloads, n_seeds, n_epochs)
     n_cells = len(grid)
     groups = plan_groups(grid)
 
@@ -71,7 +84,8 @@ def run_suite(scenarios, n_seeds: int, n_epochs: int) -> dict:
     dt_percell = time.perf_counter() - t0
 
     return {
-        "config": {"scenarios": list(scenarios), "n_seeds": n_seeds,
+        "config": {"scenarios": list(scenarios),
+                   "payloads": list(payloads), "n_seeds": n_seeds,
                    "n_epochs": n_epochs, "n_cells": n_cells,
                    "n_groups": len(groups),
                    "platform": platform.platform(),

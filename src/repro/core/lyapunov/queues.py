@@ -21,8 +21,10 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["QueueState", "SystemParams", "init_queues", "step_queues"]
+__all__ = ["QueueState", "SystemParams", "init_queues", "step_queues",
+           "stack_system_params"]
 
 
 class QueueState(NamedTuple):
@@ -55,6 +57,26 @@ jax.tree_util.register_pytree_node(
     lambda sp: ((sp.T, sp.p, sp.delta, sp.xi, sp.f_max, sp.F, sp.E_cap,
                  sp.V, sp.lam), None),
     lambda _, leaves: SystemParams(*leaves))
+
+
+def stack_system_params(params) -> SystemParams:
+    """Stack per-lane :class:`SystemParams` along a leading (S,) axis.
+
+    The result is the per-lane parameter-row pytree
+    ``batched_schedule_slot`` consumes: scalar leaves (``T``, ``F``,
+    ``V``) become (S,) arrays and (M,) leaves become (S, M), so each
+    vmapped lane sees exactly its own physics.  Lanes may differ in any
+    parameter but must share the worker count M (array width).
+
+    Stacking happens host-side (one device put per leaf) — per-leaf jnp
+    dispatches would dominate fleet construction for sweep-sized grids.
+    The float64→float32 round-trip is exact: numpy's double of a python
+    float rounds to the same float32 jnp would produce directly.
+    """
+    return jax.tree_util.tree_map(
+        lambda *leaves: jnp.asarray(
+            np.stack([np.asarray(l) for l in leaves]), jnp.float32),
+        *params)
 
 
 def init_queues(M: int, *, E0: float = 0.0) -> QueueState:

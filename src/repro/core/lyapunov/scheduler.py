@@ -148,13 +148,20 @@ def schedule_slot(state: QueueState, params: SystemParams, obs: Observation,
 
 #: ``schedule_slot`` over a fleet axis: state leaves carry a leading (S,)
 #: batch dimension (``R_server`` becomes (S,)), per-worker observation
-#: fields are (S, M), and the scalar sub-channel budget ``L`` plus the
-#: ``SystemParams`` physics are shared across the fleet.  This is the
-#: per-slot kernel of the batched fleet engine (``repro.sim.batched``).
+#: fields are (S, M), the per-lane sub-channel budget ``L`` is (S,), and
+#: the ``SystemParams`` physics arrive as *per-lane parameter rows* — a
+#: pytree whose leaves are stacked along a leading (S,) axis
+#: (:func:`~repro.core.lyapunov.queues.stack_system_params`), so lanes of
+#: one fleet may differ in slot length, power, battery or Lyapunov knobs.
+#: Every per-lane slice computes exactly what the scalar
+#: ``schedule_slot`` would (all ops are elementwise or per-lane sorts),
+#: so heterogeneous stacking preserves the engines' bit-identity
+#: contract.  This is the per-slot kernel of the batched fleet engine
+#: (``repro.sim.batched``).
 batched_schedule_slot = jax.vmap(
     schedule_slot,
-    in_axes=(0, None,
-             Observation(D=0, r=0, E_H=0, L=None, new_cycles=0)))
+    in_axes=(0, 0,
+             Observation(D=0, r=0, E_H=0, L=0, new_cycles=0)))
 
 
 def run_horizon(state: QueueState, params: SystemParams, obs_seq: Observation

@@ -10,7 +10,8 @@ Experiments are declarative (DESIGN.md §3.6): a scenario is a frozen
 :class:`ScenarioSpec` (pytree data, JSON round-trippable), resolved into a
 live cluster by :func:`build_cluster`; grids of :class:`ExperimentSpec`
 cells run through :func:`sweep`, which shares one scan compile per
-physics-compatibility group.
+structural group (scheme, worker count, channel kind) — all other
+physics stack as per-lane scan inputs.
 """
 from .events import Event, EventEngine, COMPUTE_DONE, SLOT_TICK
 from .channel import (ChannelModel, CommTape, GilbertElliottChannel,

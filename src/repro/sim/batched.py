@@ -1,4 +1,4 @@
-"""Batched vmap fleet engine for the co-simulator (DESIGN.md §3.5).
+"""Batched vmap fleet engine for the co-simulator (DESIGN.md §3.5–3.6).
 
 Reformulates the communication phase of a co-simulated epoch — stage-1
 compute sampling, deadline, stage-2 planning happen host-side exactly as in
@@ -8,6 +8,20 @@ payloads, Gilbert–Elliott channel state) carried as stacked arrays and
 ``vmap``-ed over seeds.  One device dispatch advances a whole fleet by a
 chunk of slots; the event-driven :class:`~repro.sim.cluster.EdgeCluster`
 is retained as the reference oracle.
+
+Lanes need only share *structure* — worker count ``M``, coding scheme and
+channel model class — not physics: per-lane ``CommParams`` scalars
+(``slot_T``, ``tx_power``, ``V``, batteries, harvest, sub-channels),
+per-lane ``grad_bytes``, per-lane channel parameters of one channel class
+and per-lane ``SystemParams`` all enter the chunk scan as stacked
+``(S, …)`` arrays (:class:`_StackedPhysics`), vmapped per lane by
+``batched_schedule_slot``'s per-lane parameter rows.  The per-lane
+``max_slots`` cap and slot length stay host-side in the stop tracker
+(each lane stops on its own clock).  Because every in-scan op is
+elementwise or per-lane, a lane's results never depend on which other
+lanes share the batch — the property that lets ``repro.sim.sweep`` stack
+a whole scenario × scheme × override grid into one fleet and one scan
+compile per structural group.
 
 Exactness contract (enforced by ``tests/test_batched_sim.py`` on every
 registry scenario × scheme): for identical slot-time discretization the
@@ -39,7 +53,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lyapunov import Observation, QueueState, batched_schedule_slot
+from repro.core.lyapunov import (Observation, QueueState,
+                                 batched_schedule_slot, stack_system_params)
 from repro.core.runtime import EpochResult
 from repro.sim.batched_compute import batched_comm_jobs
 from repro.sim.channel import TAPE_BLOCK, CommTape
@@ -51,7 +66,8 @@ from repro.telemetry.compilation import note_compile
 from repro.telemetry.recorder import FleetRecorder, phase_span
 
 __all__ = ["BatchedFleet", "run_fleet_batched", "MIN_CHUNK",
-           "pick_chunk", "scan_trace_count", "reset_scan_compile_cache"]
+           "pick_chunk", "stack_fleet_physics", "scan_trace_count",
+           "reset_scan_compile_cache"]
 
 #: Smallest adaptive scan chunk.  Chunks are powers of two in
 #: [MIN_CHUNK, TAPE_BLOCK], so every chunk divides the tape block and
@@ -66,36 +82,43 @@ def pick_chunk(clusters: Sequence[EdgeCluster]) -> int:
 
     A short-epoch/light scenario stops after a couple dozen slots; making
     it compute and transfer a full 256-slot chunk wastes ~90% of the scan
-    work.  This sizes the chunk from the scenario's *expected* slots per
-    epoch — compute-phase span plus a backlog-drain estimate bounded by
-    both link capacity and the sustainable energy-harvest rate — rounded
-    up to the next power of two in ``[MIN_CHUNK, TAPE_BLOCK]``.  Purely a
-    sizing heuristic: results are chunk-invariant by contract, so a bad
+    work.  This sizes the chunk from the fleet's *expected* slots per
+    epoch — per lane, that lane's compute-phase span plus a backlog-drain
+    estimate bounded by both its link capacity and its sustainable
+    energy-harvest rate — and takes the worst case over lanes, rounded up
+    to the next power of two in ``[MIN_CHUNK, TAPE_BLOCK]``.  Every
+    estimate reads that lane's *own* comm physics (``slot_T``,
+    ``n_subchannels``, harvest, power, payload): a heterogeneous fleet
+    whose first lane is the lightest still sizes for its heaviest lane.
+    A lane whose channel cannot estimate a nominal rate forces the
+    conservative full-block chunk — decided only after every lane has
+    been scanned, so unknown physics anywhere in the fleet wins.  Purely
+    a sizing heuristic: results are chunk-invariant by contract, so a bad
     estimate costs only throughput, never correctness.  Deterministic in
     the fleet's physics (not its size or its sampled randomness), so
     every epoch of a fleet reuses one scan compilation.
     """
-    c0 = clusters[0]
-    cp = c0.comm
-    rate = np.inf
-    for c in clusters:
-        r = c.channel.nominal_rates()
-        if r is None:                      # unknown physics: legacy chunk
-            return TAPE_BLOCK
-        rate = min(rate, float(np.mean(r)))
-    lanes = max(min(float(cp.n_subchannels), c0.M), 1.0)
-    # bytes/slot the uplink can move: link-capacity bound and the
-    # energy-sustainable bound (harvest per slot buys 1/p transmit time)
-    cap_link = lanes * max(rate, 1e-9) * cp.slot_T
-    cap_energy = lanes * cp.harvest_mean * max(rate, 1e-9) \
-        / max(cp.tx_power, 1e-9)
-    cap = max(min(cap_link, cap_energy), 1e-9)
-    drain_slots = max(float(np.sum(c.grad_bytes)) for c in clusters) / cap
-    # compute-phase span: slowest lane's per-partition share, with slack
-    # for sampling noise, the deadline margin and a stage-2 round
-    comp_time = max((c.K / max(c.M, 1)) / max(float(np.min(c.rates)), 1e-9)
-                    for c in clusters)
-    est = 4.0 * comp_time / cp.slot_T + 2.0 * drain_slots + 8.0
+    rates = [c.channel.nominal_rates() for c in clusters]
+    if any(r is None for r in rates):      # unknown physics: legacy chunk
+        return TAPE_BLOCK
+    est = 0.0
+    for c, r in zip(clusters, rates):
+        cp = c.comm
+        rate = max(float(np.mean(r)), 1e-9)
+        lanes = max(min(float(cp.n_subchannels), c.M), 1.0)
+        # bytes/slot the uplink can move: link-capacity bound and the
+        # energy-sustainable bound (harvest per slot buys 1/p transmit
+        # time)
+        cap_link = lanes * rate * cp.slot_T
+        cap_energy = lanes * cp.harvest_mean * rate / max(cp.tx_power, 1e-9)
+        cap = max(min(cap_link, cap_energy), 1e-9)
+        drain_slots = float(np.sum(c.grad_bytes)) / cap
+        # compute-phase span: the lane's slowest worker's per-partition
+        # share, with slack for sampling noise, the deadline margin and a
+        # stage-2 round
+        comp_time = (c.K / max(c.M, 1)) / max(float(np.min(c.rates)), 1e-9)
+        est = max(est, 4.0 * comp_time / cp.slot_T + 2.0 * drain_slots
+                  + 8.0)
     chunk = MIN_CHUNK
     while chunk < min(est, TAPE_BLOCK):
         chunk *= 2
@@ -173,6 +196,50 @@ def _chunk_runner(channel_step, S: int, M: int, telemetry: bool = False):
 
 
 # --------------------------------------------------------------------- #
+# stacked per-lane physics (built once per fleet, reused every epoch)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class _StackedPhysics:
+    """The fleet's comm physics stacked along the lane axis.
+
+    Device-side members feed the chunk scan as traced constants (so every
+    structural group of the same ``(S, M, channel class)`` shares one
+    compilation regardless of parameter values); the host-side rows
+    (``slot_T``, ``cap``, ``E0``) drive the per-lane stop tracking.
+    """
+    sysp: object            # SystemParams pytree, leaves stacked (S, …)
+    gb: object              # (S, M) jnp f32 per-lane payload bytes
+    L: object               # (S,)   jnp f32 per-lane sub-channel budget
+    chp: dict               # channel params, leaves stacked (S, …)
+    E_init: object          # (S, M) jnp f32 per-lane initial battery
+    slot_T: np.ndarray      # (S,)   f64 per-lane slot length
+    cap: np.ndarray         # (S,)   int per-lane max_slots
+    grid_len: int           # max over lanes of the slot cap
+
+
+def stack_fleet_physics(clusters: Sequence[EdgeCluster]) -> _StackedPhysics:
+    """Stack per-lane comm physics into the scan's traced constants."""
+    per_chp = [c.channel.batched_params() for c in clusters]
+    chp = ({key: jnp.asarray(np.stack([np.asarray(d[key])
+                                       for d in per_chp]))
+            for key in per_chp[0]} if per_chp[0] else {})
+    cap = np.array([max(c.comm.max_slots, 1) for c in clusters])
+    M = clusters[0].M
+    return _StackedPhysics(
+        sysp=stack_system_params([c.sys_params for c in clusters]),
+        gb=jnp.asarray(np.stack([c.grad_bytes for c in clusters]),
+                       jnp.float32),
+        L=jnp.asarray(np.array([np.asarray(c._L) for c in clusters]),
+                      jnp.float32),
+        chp=chp,
+        E_init=jnp.asarray(np.stack(
+            [np.full(M, c.comm.E0) for c in clusters]), jnp.float32),
+        slot_T=np.array([c.comm.slot_T for c in clusters]),
+        cap=cap,
+        grid_len=int(cap.max()))
+
+
+# --------------------------------------------------------------------- #
 # host-side stop tracking (mirrors the oracle's per-slot checks)
 # --------------------------------------------------------------------- #
 class _StopTracker:
@@ -181,16 +248,18 @@ class _StopTracker:
     Byte ledgers accumulate in float64 exactly as the oracle does; decode
     gates are evaluated host-side on arrival-mask changes only (the gate is
     a pure function of the mask, so skipping unchanged slots is lossless).
+    Slot length, slot cap, battery level and payload tolerance are all
+    per-lane rows, so heterogeneous lanes stop on their own clocks.
     """
 
     def __init__(self, jobs: Sequence[CommJob],
                  clusters: Sequence[EdgeCluster],
                  visible: np.ndarray, grid_len: int):
-        cp = clusters[0].comm
         S, M = visible.shape
         self.jobs = jobs
-        self.T = cp.slot_T
-        self.cap = cp.max_slots
+        self.T = np.array([c.comm.slot_T for c in clusters])       # (S,)
+        self.cap = np.array([max(c.comm.max_slots, 1)
+                             for c in clusters])                   # (S,)
         self.grid_len = grid_len
         self.gb = np.stack([c.grad_bytes for c in clusters])       # (S, M)
         self.visible = visible
@@ -202,8 +271,9 @@ class _StopTracker:
             fin.any(1), np.max(np.where(fin, visible, -1), axis=1), -1)
         self.tiny = np.array([stuck_tolerance(c.grad_bytes)
                               for c in clusters])                  # (S,)
+        E0 = np.array([float(c.comm.E0) for c in clusters])        # (S,)
         # energy at each slot's start, for the oracle's float64 overdraft
-        self._E_prev = np.full((S, M), float(cp.E0))
+        self._E_prev = np.broadcast_to(E0[:, None], (S, M)).copy()
         self.stopped = np.zeros(S, bool)
         self.ok = np.zeros(S, bool)
         self.n_slots = np.zeros(S, np.int64)
@@ -211,7 +281,7 @@ class _StopTracker:
         self.admitted = np.zeros((S, M))
         self.delivered = np.zeros((S, M))
         self.idle = np.zeros(S, np.int64)
-        self.min_E = np.full(S, float(cp.E0))
+        self.min_E = E0.copy()
         self.max_od = np.zeros(S)
         self.arrived = np.zeros((S, M), bool)
         self.snap_Q = np.zeros((S, M))
@@ -272,7 +342,7 @@ class _StopTracker:
                 self.stopped |= stop
                 self.ok[stop] = decod[stop]
                 self.n_slots[stop] = k + 1
-                self.decode_time[stop] = (k + 1) * self.T
+                self.decode_time[stop] = (k + 1) * self.T[stop]
                 self.snap_Q[stop] = Q_t[j][stop].astype(np.float64)
                 self.snap_E[stop] = E_t[j][stop]
                 self.snap_pend[stop] = p_t[j][stop].astype(np.float64)
@@ -309,37 +379,42 @@ _SERIES_OUT = {"Q": "Q", "H": "H", "E": "E", "admitted": "d",
 def _batched_comm(clusters: Sequence[EdgeCluster],
                   jobs: Sequence[CommJob],
                   chunk: Optional[int] = None, *,
+                  physics: Optional[_StackedPhysics] = None,
                   telemetry: Optional[FleetRecorder] = None,
                   epoch: int = 0) -> List[CommStats]:
     c0 = clusters[0]
     series = telemetry is not None and telemetry.wants_series
     chunk = int(chunk or TAPE_BLOCK)
-    S, M, cp = len(clusters), c0.M, c0.comm
-    T = cp.slot_T
-    grid_len = max(cp.max_slots, 1)          # the oracle always runs slot 0
-    chan = c0.channel
-    stateful = chan.stateful
+    S, M = len(clusters), c0.M
+    if physics is None:
+        physics = stack_fleet_physics(clusters)
+    grid_len = physics.grid_len              # the oracle always runs slot 0
+    stateful = c0.channel.stateful
 
     ready = np.stack([j.ready_time for j in jobs])             # (S, M) f64
     # slot at which each worker's payload becomes visible to the scheduler:
-    # first k with k*T >= ready (ties fire before the tick, matching the
-    # oracle's heap ordering); grid_len ⟹ never within this epoch
-    grid = np.arange(grid_len, dtype=np.float64) * T
-    visible = np.searchsorted(grid, ready, side="left")
+    # first k on that lane's clock with k*T >= ready (ties fire before the
+    # tick, matching the oracle's heap ordering); >= the lane's slot cap
+    # ⟹ never within this epoch.  Each lane searches its own slot grid —
+    # lanes may tick at different slot_T.
+    grids = {}                               # slot grid per distinct slot_T
+    visible = np.empty((S, M), np.int64)
+    for i, T_i in enumerate(physics.slot_T):
+        grid = grids.get(T_i)
+        if grid is None:
+            grid = grids[T_i] = np.arange(grid_len, dtype=np.float64) * T_i
+        visible[i] = np.searchsorted(grid, ready[i], side="left")
 
-    tapes = [CommTape(c.channel, c.engine.rng, cp.harvest_mean,
-                      cp.harvest_jitter) for c in clusters]
+    tapes = [CommTape(c.channel, c.engine.rng, c.comm.harvest_mean,
+                      c.comm.harvest_jitter) for c in clusters]
 
-    runner = _chunk_runner(type(chan).step_batched if stateful else None,
-                           S, M, series)
-    consts = (c0.sys_params,
-              jnp.asarray(c0.grad_bytes, jnp.float32),
-              c0._L,
-              jnp.asarray(visible, jnp.int32),
-              chan.batched_params())
+    runner = _chunk_runner(
+        type(c0.channel).step_batched if stateful else None, S, M, series)
+    consts = (physics.sysp, physics.gb, physics.L,
+              jnp.asarray(visible, jnp.int32), physics.chp)
 
     z = jnp.zeros((S, M), jnp.float32)
-    state = QueueState(Q=z, H=z, E=jnp.full((S, M), cp.E0, jnp.float32),
+    state = QueueState(Q=z, H=z, E=physics.E_init,
                        R=z, R_server=jnp.zeros((S,), jnp.float32))
     if stateful:
         ch_state = jnp.asarray(np.stack(
@@ -383,9 +458,12 @@ def _batched_comm(clusters: Sequence[EdgeCluster],
                 [d[key] for d in per_seed], axis=1))
                 for key in per_seed[0]}
         else:
-            xs["r"] = jnp.asarray(
-                chan.rates_for_slots(np.arange(k0, k0 + chunk)),
-                jnp.float32)
+            # per-lane rate rows: (chunk, S, M) — stateless channels of
+            # one class but different parameters stack freely
+            slots = np.arange(k0, k0 + chunk)
+            xs["r"] = jnp.asarray(np.stack(
+                [c.channel.rates_for_slots(slots) for c in clusters],
+                axis=1), jnp.float32)
         carry, outs = runner(carry, xs, consts)
         outs_np = jax.tree.map(np.asarray, outs)
         tracker.consume(k0, outs_np)
@@ -408,16 +486,21 @@ def _batched_comm(clusters: Sequence[EdgeCluster],
 # fleet driver
 # --------------------------------------------------------------------- #
 class BatchedFleet:
-    """A fleet of same-physics clusters advanced one batched epoch at a
+    """A fleet of same-structure clusters advanced one batched epoch at a
     time: per-seed compute phases on the host (planner/predictor state is
     inherently sequential), then one vmap-ed slot scan for the whole
     fleet's communication phase, then per-seed decode + assembly.
 
-    Seeds must share the scenario physics (M, scheme, CommParams, channel
-    model); the per-seed randomness — completion times, fading, harvest —
-    is what varies across the batch axis.  Scenario/scheme grids map onto
-    fleets grouped by physics signature (see ``repro.sim.sweep``) or
-    host-level loops over fleets (``montecarlo.compare_schemes``).
+    Lanes must share only the fleet's *structure* — worker count ``M``,
+    coding scheme, and channel model class — because those shape the
+    compiled scan.  Everything else may vary per lane: ``CommParams``
+    scalars (slot length, power, batteries, harvest, sub-channels, slot
+    cap), ``grad_bytes``, channel parameters of the same class, and
+    ``SystemParams`` all enter the scan as stacked ``(S, …)`` parameter
+    rows (:class:`_StackedPhysics`), alongside the per-seed randomness.
+    Scenario/scheme grids map onto fleets grouped by structural signature
+    (see ``repro.sim.sweep``) or host-level loops over fleets
+    (``montecarlo.compare_schemes``).
 
     ``scenario`` is a :class:`~repro.sim.spec.ScenarioSpec` (registry
     names are accepted as a deprecated shim).
@@ -460,26 +543,19 @@ class BatchedFleet:
         if not clusters:
             raise ValueError("need at least one cluster")
         c0 = clusters[0]
-
-        def comm_key(cluster):
-            # grad_bytes may be an ndarray (dataclass __eq__ would raise);
-            # it is compared separately via the broadcast per-worker array
-            f = dataclasses.asdict(cluster.comm)
-            f.pop("grad_bytes")
-            return f
-
         for c in clusters[1:]:
             if (c.M != c0.M or c.scheme != c0.scheme
-                    or comm_key(c) != comm_key(c0)
-                    or type(c.channel) is not type(c0.channel)
-                    or c.channel.physics_key() != c0.channel.physics_key()
-                    or not np.array_equal(c.grad_bytes, c0.grad_bytes)):
+                    or type(c.channel) is not type(c0.channel)):
                 raise ValueError(
-                    "BatchedFleet requires homogeneous physics across "
-                    "seeds (same M, scheme, CommParams, channel model and "
-                    "grad_bytes); sweep heterogeneous grids as separate "
-                    "fleets")
+                    "BatchedFleet lanes must share structure: same worker "
+                    "count M, coding scheme and channel model class "
+                    f"(got M={c.M}/{c0.M}, scheme={c.scheme!r}/"
+                    f"{c0.scheme!r}, channel={type(c.channel).__name__}/"
+                    f"{type(c0.channel).__name__}); per-lane physics "
+                    "within one structure stack freely")
         self.clusters = clusters
+        # stacked per-lane physics, built once and reused every epoch
+        self._physics = stack_fleet_physics(clusters)
         self.telemetry = telemetry
         if telemetry:
             # host-path compute phases (compute="host") emit per-lane
@@ -512,6 +588,7 @@ class BatchedFleet:
                 jobs = [c.comm_job(epoch) for c in self.clusters]
         with phase_span(rec, "comm", epoch=epoch):
             stats = _batched_comm(self.clusters, jobs, self.chunk,
+                                  physics=self._physics,
                                   telemetry=rec, epoch=epoch)
         with phase_span(rec, "decode", epoch=epoch):
             results = [job.assemble(st) for job, st in zip(jobs, stats)]

@@ -57,7 +57,8 @@ class ChannelModel:
     def physics_key(self) -> tuple:
         """Hashable description of the channel physics — two channels with
         equal keys produce identical rate processes from identical draws
-        (used by ``BatchedFleet`` to validate fleet homogeneity)."""
+        (used to check spec↔channel equivalence; fleet lanes need only
+        share the channel *class*, parameters stack per lane)."""
         raise NotImplementedError
 
     def nominal_rates(self):

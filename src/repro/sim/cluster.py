@@ -66,16 +66,26 @@ def _shared_jnp_consts(M, slot_T, tx_power, delta, xi, f_max, F, E_cap, V,
     the immutable jnp constants turns 64 × 8 tiny device allocations into
     one, which matters once the compute phase is batched and cluster
     construction is a visible share of fleet wall-clock.
+
+    The scalar physics (``T``, ``F``, ``V``) are stored as 0-d jnp arrays
+    rather than python floats: a python float would be constant-folded on
+    the host in float64 (e.g. ``V / ln2`` inside P4) when the scalar
+    ``schedule_slot`` traces, while the batched engine — which stacks
+    per-lane SystemParams rows and vmaps over them
+    (:func:`~repro.core.lyapunov.queues.stack_system_params`) — computes
+    the same expression as in-graph float32 ops.  Tracing both paths with
+    array scalars keeps the arithmetic bit-identical between the
+    event-driven oracle and the stacked per-lane scan.
     """
     return (SystemParams(
-        T=slot_T,
+        T=jnp.asarray(slot_T),
         p=jnp.full((M,), tx_power),
         delta=jnp.full((M,), delta),
         xi=jnp.full((M,), xi),
         f_max=jnp.full((M,), f_max),
-        F=F,
+        F=jnp.asarray(F),
         E_cap=jnp.full((M,), E_cap),
-        V=V,
+        V=jnp.asarray(V),
         lam=jnp.ones((M,))),
         jnp.asarray(n_subchannels, jnp.float32),
         jnp.zeros((M,)))

@@ -16,7 +16,7 @@ hashable dataclasses:
 
 Because a spec is plain data it can be stored (``to_json``/``from_json``
 round-trip, golden-tested per registry scenario), hashed (sweep grouping,
-dict keys), compared (fleet-homogeneity checks reduce to ``==`` on the
+dict keys), compared (structural checks reduce to ``==`` on the
 sub-specs) and carried through jit boundaries (every spec class is
 registered as a *static* pytree node — zero leaves, the whole value is
 treedef).  ``build_cluster(spec, scheme=..., seed=...)`` is the single

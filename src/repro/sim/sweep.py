@@ -1,12 +1,16 @@
 """Grid sweeps that share one compile per physics group (DESIGN.md §3.6).
 
 A sweep grid is a sequence of :class:`~repro.sim.spec.ExperimentSpec`
-cells (scenario × scheme × seeds × epochs).  Cells whose *static physics
+cells (scenario × scheme × seeds × epochs).  Cells whose *structural
 signature* matches — same worker count ``M``, same scheme topology, same
-channel spec (⟹ equal ``physics_key()``), same comm/energy physics
-including the slot cap — are stacked along the batched engine's existing
-fleet axis and run through **one** :class:`~repro.sim.batched.BatchedFleet`,
+channel model *kind* — are stacked along the batched engine's fleet axis
+and run through **one** :class:`~repro.sim.batched.BatchedFleet`,
 so the whole group compiles the slot scan once instead of once per cell.
+Everything else about a cell's physics — comm scalars, payload sizes,
+channel parameters, energy model — enters the scan as stacked per-lane
+parameter rows (``repro.sim.batched.stack_fleet_physics``), so a whole
+scenario × scheme × override grid typically collapses to a handful of
+structural groups.
 Results are unstacked into per-cell :class:`FleetSummary` rows that are
 bit-identical to running each cell alone with
 ``run_fleet(engine="batched")``:
@@ -38,17 +42,20 @@ __all__ = ["compat_key", "plan_groups", "sweep"]
 
 
 def compat_key(exp: ExperimentSpec) -> Tuple:
-    """Hashable static-physics signature of a grid cell.
+    """Hashable *structural* signature of a grid cell.
 
-    Two cells with equal keys satisfy ``BatchedFleet``'s homogeneity
-    requirement (same ``M``, scheme, channel physics, CommParams
-    including ``grad_bytes`` and ``max_slots``) and may therefore share
-    one stacked fleet.  Compute-phase heterogeneity (rates, stragglers,
-    stage sizing) is host-side per-lane state and deliberately *not*
-    part of the key.
+    Two cells with equal keys satisfy ``BatchedFleet``'s structural
+    requirement — same worker count ``M``, same scheme, same channel
+    model kind — and may therefore share one stacked fleet.  Everything
+    else (CommParams scalars, ``grad_bytes``, channel parameters of the
+    shared kind, energy physics, compute physics) varies freely per lane
+    inside a group and is deliberately *not* part of the key: parameter
+    values ride through the compiled scan as stacked per-lane rows, so
+    keying on them would only shatter the grid into needless
+    recompiles — the grouping regression this key shape fixes.
     """
     sc = exp.scenario
-    return (exp.scheme, sc.M, sc.channel, sc.comm, sc.energy)
+    return (exp.scheme, sc.M, sc.channel.kind)
 
 
 def plan_groups(grid: Sequence[ExperimentSpec]) -> List[List[int]]:
@@ -66,9 +73,9 @@ def plan_groups(grid: Sequence[ExperimentSpec]) -> List[List[int]]:
 def sweep(grid: Sequence[ExperimentSpec], *,
           engine: str = "batched") -> List[FleetSummary]:
     """Run every grid cell, one :class:`FleetSummary` per cell in input
-    order.  With the default batched engine, physics-compatible cells are
-    stacked into one fleet per group — compute and comm phases both
-    vectorized over the stacked lanes (lanes that differ in compute
+    order.  With the default batched engine, structurally compatible
+    cells are stacked into one fleet per group — compute and comm phases
+    both vectorized over the stacked lanes (lanes that differ in compute
     physics fall into separate *compute groups* inside
     ``repro.sim.batched_compute`` but still share the one comm-scan
     compile); ``engine="hybrid"`` stacks the same fleets with the
@@ -79,7 +86,7 @@ def sweep(grid: Sequence[ExperimentSpec], *,
     groups = plan_groups(grid)      # also validates cell types, any engine
     if engine not in ("batched", "hybrid"):
         return [run_experiment(exp, engine=engine) for exp in grid]
-    rows: List[FleetSummary] = [None] * len(grid)       # type: ignore
+    rows: Dict[int, FleetSummary] = {}
     for idxs in groups:
         cells = [grid[i] for i in idxs]
         clusters = [build_cluster(c.scenario, c.scheme, seed)
@@ -97,4 +104,7 @@ def sweep(grid: Sequence[ExperimentSpec], *,
             rows[i] = summarize_fleet(cell.scenario.name, cell.scheme,
                                       cell.n_seeds, cell.n_epochs, results)
             lane += cell.n_seeds
-    return rows
+    # plan_groups partitions the index range; assert full coverage so a
+    # grouping bug surfaces here as a hard error, never as a None row
+    assert len(rows) == len(grid) and all(i in rows for i in range(len(grid)))
+    return [rows[i] for i in range(len(grid))]

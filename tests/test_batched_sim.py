@@ -113,11 +113,31 @@ def test_batched_fleet_accepts_ndarray_grad_bytes():
                               f"ndarray grad_bytes seed={seed}")
 
 
-def test_batched_fleet_rejects_heterogeneous_physics():
+def test_batched_fleet_rejects_structural_mismatch():
     a = build_cluster(scenario_spec("homogeneous"), "two-stage", 0)
-    b = build_cluster(scenario_spec("heterogeneous-rates"), "two-stage", 1)
-    with pytest.raises(ValueError, match="homogeneous physics"):
+    # different worker count M
+    import dataclasses
+    from repro.sim.spec import StaticChannelSpec
+    sc0 = scenario_spec("homogeneous")
+    b = build_cluster(
+        sc0.with_overrides(
+            M=4, M1=2,
+            channel=StaticChannelSpec(rates=sc0.channel.rates[:4]),
+            compute=dataclasses.replace(
+                sc0.compute,
+                rates=(sc0.compute.rates[:4]
+                       if sc0.compute.rates is not None else None))),
+        "two-stage", 1)
+    with pytest.raises(ValueError, match="share structure"):
         BatchedFleet(clusters=[a, b])
+    # different coding scheme
+    c = build_cluster(scenario_spec("homogeneous"), "cyclic", 1)
+    with pytest.raises(ValueError, match="share structure"):
+        BatchedFleet(clusters=[a, c])
+    # different channel model class
+    d = build_cluster(scenario_spec("fading-uplink"), "two-stage", 1)
+    with pytest.raises(ValueError, match="share structure"):
+        BatchedFleet(clusters=[a, d])
     with pytest.raises(ValueError, match="scenario spec"):
         BatchedFleet()
     with pytest.raises(ValueError, match="no effect"):

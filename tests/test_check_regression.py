@@ -130,6 +130,33 @@ def test_telemetry_overhead_gate_fails_on_missing_section(bench_dir,
     assert "no 'telemetry' section" in capsys.readouterr().out
 
 
+def test_grid_speedup_gate_trips_below_absolute_floor(bench_dir, capsys):
+    """A grouped sweep slower than per-cell must fail on the absolute
+    floor even when the committed baseline itself recorded a slowdown
+    (the shape of the original grouping regression)."""
+    slow = copy.deepcopy(GRID)
+    slow["grouped"]["cells_per_sec"] = 19.0
+    slow["speedup"] = 0.95                             # grouping loses
+    (bench_dir / "BENCH_grid.json").write_text(json.dumps(slow))
+    # regenerate baselines from the slowed artifact: relative gates all
+    # pass, so only the absolute floor can catch the regression
+    assert main(_argv(bench_dir, ["--update"])) == 0
+    assert main(_argv(bench_dir)) == 1
+    assert "FAIL grid speedup" in capsys.readouterr().out
+    # a relaxed floor clears the same artifact
+    assert main(_argv(bench_dir, ["--grid-speedup-floor", "0.9"])) == 0
+
+
+def test_grid_speedup_gate_fails_on_missing_metric(bench_dir, capsys):
+    """Dropping the speedup field must not turn the floor into a silent
+    no-op."""
+    bare = copy.deepcopy(GRID)
+    del bare["speedup"]
+    (bench_dir / "BENCH_grid.json").write_text(json.dumps(bare))
+    assert main(_argv(bench_dir)) == 1
+    assert "no 'speedup' field" in capsys.readouterr().out
+
+
 def test_missing_artifacts_is_a_usage_error(tmp_path):
     assert main(["--fleet", str(tmp_path / "nope.json"),
                  "--grid", str(tmp_path / "nope2.json"),
@@ -157,3 +184,4 @@ def test_committed_baselines_cover_smoke_metrics():
     with open(f"{cr.BASELINE_DIR}/BENCH_grid.json") as f:
         grid = json.load(f)["metrics"]
     assert "grid.grouped.cells_per_sec" in grid
+    assert "grid.speedup" in grid

@@ -11,8 +11,8 @@ tuning: a wrong estimate can never change results.
 import numpy as np
 import pytest
 
-from repro.sim import BatchedFleet, pick_chunk, scenario_spec, \
-    summarize_fleet
+from repro.sim import BatchedFleet, build_cluster, pick_chunk, \
+    scenario_spec, summarize_fleet
 from repro.sim.batched import MIN_CHUNK
 from repro.sim.channel import TAPE_BLOCK
 
@@ -71,6 +71,59 @@ def test_adaptive_chunk_is_deterministic_in_physics():
     a = BatchedFleet(spec, "two-stage", [0])
     b = BatchedFleet(spec, "two-stage", [3, 4, 5])   # fleet size ≠ factor
     assert a.chunk == b.chunk == pick_chunk(a.clusters)
+
+
+def test_pick_chunk_is_fleet_wide_worst_case():
+    """A mixed-physics fleet whose *first* lane is the lightest must still
+    size for its heaviest lane — the pick scans every lane, it does not
+    read lane 0's physics for the whole fleet."""
+    light = build_cluster(scenario_spec("homogeneous"), "two-stage", 0)
+    heavy = build_cluster(scenario_spec("saturated-uplink"), "two-stage", 1)
+    assert pick_chunk([light]) < TAPE_BLOCK
+    assert pick_chunk([heavy]) == TAPE_BLOCK
+    # lightest lane first: the heavy lane must still win
+    assert pick_chunk([light, heavy]) == pick_chunk([heavy])
+    assert pick_chunk([heavy, light]) == pick_chunk([heavy])
+
+
+def test_pick_chunk_unknown_physics_anywhere_forces_full_block(monkeypatch):
+    """A lane whose channel cannot estimate a nominal rate forces the
+    conservative TAPE_BLOCK chunk regardless of its position."""
+    light = build_cluster(scenario_spec("homogeneous"), "two-stage", 0)
+    unknown = build_cluster(scenario_spec("homogeneous"), "two-stage", 1)
+    monkeypatch.setattr(unknown.channel, "nominal_rates", lambda: None)
+    assert pick_chunk([light, unknown]) == TAPE_BLOCK
+    assert pick_chunk([unknown, light]) == TAPE_BLOCK
+
+
+# --------------------------------------------------------------------- #
+# heterogeneous fleets obey the same invariance contract
+# --------------------------------------------------------------------- #
+def _hetero_clusters(seeds=SEEDS):
+    """One structural group, per-lane physics varying across cells."""
+    specs = [scenario_spec("homogeneous"),
+             scenario_spec("homogeneous").with_overrides(
+                 name="het-payload", grad_bytes=2.5),
+             scenario_spec("saturated-uplink"),
+             scenario_spec("energy-harvesting-constrained")]
+    return [build_cluster(sp, "two-stage", s) for sp in specs for s in seeds]
+
+
+def _hetero_summary(chunk):
+    fleet = BatchedFleet(clusters=_hetero_clusters(), chunk=chunk)
+    per_epoch = fleet.run(N_EPOCHS)
+    results = [per_epoch[e][i] for i in range(fleet.n_seeds)
+               for e in range(N_EPOCHS)]
+    return summarize_fleet("hetero", "two-stage", fleet.n_seeds, N_EPOCHS,
+                           results)
+
+
+def test_heterogeneous_fleet_chunk_invariance():
+    """Stacked per-lane physics must not break the chunk-invariance
+    contract: bit-identical summaries for chunk ∈ {32, 64, TAPE_BLOCK}
+    and the adaptive pick."""
+    rows = [_hetero_summary(chunk) for chunk in (32, 64, TAPE_BLOCK, None)]
+    assert rows[0] == rows[1] == rows[2] == rows[3]
 
 
 def test_chunk_must_divide_tape_block():

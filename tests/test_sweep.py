@@ -14,8 +14,8 @@ from repro.sim import (ExperimentSpec, compat_key, plan_groups,
                        scan_trace_count, scenario_spec, sweep)
 from repro.sim.cluster import SCHEMES
 
-#: Two registry scenarios with identical channel/comm/energy physics but
-#: different compute heterogeneity — the canonical compatible pair.
+#: Two registry scenarios of identical structure (M, static channel kind)
+#: but different compute heterogeneity — the canonical compatible pair.
 COMPATIBLE = ("homogeneous", "bursty-stragglers")
 
 
@@ -39,11 +39,15 @@ def test_compatible_scenarios_share_a_group_per_scheme():
     assert a.channel == b.channel and a.comm == b.comm
 
 
-def test_incompatible_physics_lands_in_separate_groups():
+def test_grouping_is_structural_not_parametric():
+    """Grouping keys on structure (scheme, M, channel *kind*) only:
+    saturated-uplink differs from homogeneous in payload and comm
+    scalars yet shares its static-channel group, while fading-uplink's
+    Gilbert–Elliott channel is a different model class and splits off."""
     cells = [ExperimentSpec(scenario=scenario_spec(n), n_seeds=2)
              for n in ("homogeneous", "saturated-uplink", "fading-uplink")]
     groups = plan_groups(cells)
-    assert len(groups) == 3           # payload and channel physics differ
+    assert groups == [[0, 1], [2]]
     with pytest.raises(TypeError, match="ExperimentSpec"):
         plan_groups([cells[0], "homogeneous"])
     # both engines reject an invalid grid the same way
@@ -106,20 +110,104 @@ def test_sweep_oracle_engine_agrees_with_batched():
                                                    rel=1e-9), f
 
 
-def test_sweep_over_override_axis_groups_by_physics():
-    """A sweep along a physics axis (payload size) cannot share fleets —
-    one group per grad_bytes value — but still runs and summarizes, with
-    ``name=`` relabeling keeping the rows distinguishable."""
+def test_sweep_over_override_axis_shares_one_fleet():
+    """A sweep along a physics axis (payload size) shares ONE fleet and
+    one scan compile — the per-lane grad_bytes ride through the stacked
+    physics rows — while every row stays bit-identical to its standalone
+    per-cell fleet.  This is the grouping regression fix: the old
+    full-physics key shattered this grid into one group per value."""
     base = scenario_spec("homogeneous")
     grid = [ExperimentSpec(
                 scenario=base.with_overrides(name=f"homogeneous-gb{gb}",
                                              grad_bytes=gb),
                 n_seeds=2, n_epochs=1)
             for gb in (0.5, 1.0, 2.0)]
-    assert len(plan_groups(grid)) == 3
+    assert len(plan_groups(grid)) == 1
+    per_cell = [run_experiment(c, engine="batched") for c in grid]
+    reset_scan_compile_cache()
+    before = scan_trace_count()
     rows = sweep(grid)
+    assert scan_trace_count() - before == 1
+    assert rows == per_cell
     assert [r.scenario for r in rows] \
         == ["homogeneous-gb0.5", "homogeneous-gb1.0", "homogeneous-gb2.0"]
     assert all(np.isfinite(r.mean_time) and r.mean_time > 0 for r in rows)
     # heavier payloads take more slots to drain
     assert rows[0].mean_slots <= rows[2].mean_slots
+
+
+# --------------------------------------------------------------------- #
+# heterogeneous-physics groups (the tentpole contract)
+# --------------------------------------------------------------------- #
+def _hetero_grid(n_seeds=3, n_epochs=2):
+    """Grid of one structural group whose cells differ in nearly every
+    comm-physics knob: payload, slot length, power, harvest, sub-channel
+    count, slot cap, static channel rates, V."""
+    base = scenario_spec("homogeneous")
+    sat = scenario_spec("saturated-uplink")
+    return [
+        ExperimentSpec(scenario=base, n_seeds=n_seeds, n_epochs=n_epochs),
+        ExperimentSpec(scenario=base.with_overrides(
+            name="het-payload", grad_bytes=2.5),
+            n_seeds=n_seeds, n_epochs=n_epochs),
+        ExperimentSpec(scenario=sat, n_seeds=n_seeds, n_epochs=n_epochs),
+        ExperimentSpec(scenario=scenario_spec("heterogeneous-rates"),
+                       n_seeds=n_seeds, n_epochs=n_epochs),
+        ExperimentSpec(
+            scenario=scenario_spec("energy-harvesting-constrained"),
+            n_seeds=n_seeds, n_epochs=n_epochs),
+    ]
+
+
+def test_heterogeneous_group_rows_bit_identical_one_compile():
+    """Cells with different comm physics of one structure stack into a
+    single fleet whose rows equal per-cell batched fleets bit-for-bit,
+    with exactly one scan trace for the whole grid."""
+    grid = _hetero_grid()
+    assert len(plan_groups(grid)) == 1
+    per_cell = [run_experiment(c, engine="batched") for c in grid]
+    reset_scan_compile_cache()
+    before = scan_trace_count()
+    rows = sweep(grid)
+    assert scan_trace_count() - before == 1
+    assert rows == per_cell
+
+
+def test_heterogeneous_group_agrees_with_oracle():
+    """The stacked heterogeneous fleet still matches the event-driven
+    reference loop on the summary statistics."""
+    grid = _hetero_grid(n_seeds=2, n_epochs=1)
+    a = sweep(grid)
+    b = sweep(grid, engine="oracle")
+    for ra, rb in zip(a, b):
+        for f in ("mean_time", "mean_comm_time", "mean_slots",
+                  "decode_failure_rate"):
+            assert getattr(ra, f) == pytest.approx(getattr(rb, f),
+                                                   rel=1e-9), f
+
+
+def test_mixed_kind_grid_traces_once_per_structural_group():
+    """Static-kind and Gilbert–Elliott-kind cells split into exactly two
+    structural groups and the scan traces once per group."""
+    grid = [ExperimentSpec(scenario=scenario_spec(n), n_seeds=2, n_epochs=1)
+            for n in ("homogeneous", "saturated-uplink", "fading-uplink")]
+    n_groups = len(plan_groups(grid))
+    assert n_groups == 2
+    per_cell = [run_experiment(c, engine="batched") for c in grid]
+    reset_scan_compile_cache()
+    before = scan_trace_count()
+    rows = sweep(grid)
+    assert scan_trace_count() - before == n_groups
+    assert rows == per_cell
+
+
+# --------------------------------------------------------------------- #
+# partition edge cases (the rows-coverage regression guard)
+# --------------------------------------------------------------------- #
+def test_empty_grid_and_single_cell_sweep():
+    assert sweep([]) == []
+    assert sweep([], engine="oracle") == []
+    cell = ExperimentSpec(scenario=scenario_spec("homogeneous"),
+                          n_seeds=2, n_epochs=1)
+    rows = sweep([cell])
+    assert rows == [run_experiment(cell, engine="batched")]
