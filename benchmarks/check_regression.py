@@ -2,7 +2,8 @@
 
 Compares the JSON artifacts the benchmark jobs already produce
 (``BENCH_fleet.json`` from ``benchmarks.fleet_scale``, ``BENCH_grid.json``
-from ``benchmarks.grid_sweep``) against committed baselines under
+from ``benchmarks.grid_sweep``, ``BENCH_train.json`` from
+``benchmarks.train_e2e``) against committed baselines under
 ``benchmarks/baselines/`` and exits non-zero when any throughput metric
 fell more than ``--tolerance`` (default 30%) below its baseline — so CI
 *gates* on the perf numbers it used to merely upload.
@@ -35,6 +36,14 @@ by one, regardless of what any baseline recorded — the guard that keeps
 the grouping-regression fix from silently regressing again.
 ``--grid-speedup-floor`` / env ``GRID_SPEEDUP_FLOOR`` override it.
 
+The train artifact's two-stage time-to-target speedups vs the uncoded and
+cyclic baselines (``benchmarks.train_e2e`` under ``bursty-stragglers``)
+are gated the same two ways: relative to committed baselines *and*
+against an absolute floor (default 1.0 — the paper's headline claim that
+two-stage reaches the target loss in less simulated wall-clock must hold,
+not merely track a baseline).  Missing fields fail.  ``--train-floor`` /
+env ``TRAIN_SPEEDUP_FLOOR`` override it.
+
     PYTHONPATH=src python -m benchmarks.check_regression            # gate
     PYTHONPATH=src python -m benchmarks.check_regression --update   # refresh
 
@@ -55,6 +64,11 @@ TELEMETRY_FLOOR = 0.95
 #: Absolute floor on grouped/per-cell grid-sweep throughput: the grouped
 #: path must never be slower than running the cells one by one.
 GRID_SPEEDUP_FLOOR = 1.0
+#: Absolute floor on the two-stage time-to-target speedup vs the uncoded
+#: and cyclic baselines: the paper's headline wall-clock claim.
+TRAIN_SPEEDUP_FLOOR = 1.0
+#: The train-artifact speedup fields the floor (and baselines) gate.
+TRAIN_SPEEDUP_KEYS = ("speedup_vs_uncoded", "speedup_vs_cyclic")
 BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 
 
@@ -84,6 +98,16 @@ def grid_metrics(data: dict) -> dict:
                 float(section["cells_per_sec"])
     if "speedup" in data:
         out["grid.speedup"] = float(data["speedup"])
+    return out
+
+
+def train_metrics(data: dict) -> dict:
+    """Flat ``{metric: value}`` view of a BENCH_train.json: the two-stage
+    speedups (higher is better, so the relative gate applies directly)."""
+    out = {}
+    for key in TRAIN_SPEEDUP_KEYS:
+        if key in data:
+            out[f"train.{key}"] = float(data[key])
     return out
 
 
@@ -175,6 +199,31 @@ def check_grid_speedup(data: dict, floor: float) -> bool:
     return True
 
 
+def check_train_floor(data: dict, floor: float) -> bool:
+    """Gate the train artifact's two-stage time-to-target speedups against
+    the absolute ``floor``: the paper's wall-clock claim must hold on
+    every run, whatever a (possibly already-regressed) baseline recorded.
+    Missing fields fail so the check cannot silently drop out of CI."""
+    ok = True
+    for key in TRAIN_SPEEDUP_KEYS:
+        if key not in data:
+            print(f"FAIL train speedup: no {key!r} field in the train "
+                  f"artifact; run benchmarks.train_e2e from this tree")
+            ok = False
+            continue
+        speedup = float(data[key])
+        base = key.replace("speedup_vs_", "")
+        if speedup < floor:
+            print(f"FAIL train speedup vs {base}: two-stage reaches the "
+                  f"target loss only {speedup:.2f}x faster < floor "
+                  f"{floor:.2f}x")
+            ok = False
+        else:
+            print(f"train speedup vs {base}: {speedup:.2f}x >= floor "
+                  f"{floor:.2f}x")
+    return ok
+
+
 def update_baseline(bench_path: str, baseline_path: str, extract,
                     note: str) -> None:
     metrics = extract(_load(bench_path))
@@ -192,6 +241,8 @@ def main(argv=None) -> int:
                     help="fleet benchmark artifact")
     ap.add_argument("--grid", default="BENCH_grid.json",
                     help="grid-sweep benchmark artifact")
+    ap.add_argument("--train", default="BENCH_train.json",
+                    help="coded-training benchmark artifact")
     ap.add_argument("--baselines", default=BASELINE_DIR,
                     help="directory of committed baseline JSONs")
     ap.add_argument("--tolerance", type=float,
@@ -212,6 +263,13 @@ def main(argv=None) -> int:
                     help="absolute floor on the grid-sweep grouped/"
                          "per-cell speedup (1.0 = grouping must not lose; "
                          "env GRID_SPEEDUP_FLOOR overrides)")
+    ap.add_argument("--train-floor", type=float,
+                    default=float(os.environ.get(
+                        "TRAIN_SPEEDUP_FLOOR", TRAIN_SPEEDUP_FLOOR)),
+                    help="absolute floor on the two-stage time-to-target "
+                         "speedup vs uncoded and cyclic (1.0 = two-stage "
+                         "must not lose the paper's wall-clock claim; env "
+                         "TRAIN_SPEEDUP_FLOOR overrides)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baselines from the current artifacts")
     ap.add_argument("--note", default="refreshed via --update",
@@ -221,14 +279,17 @@ def main(argv=None) -> int:
     pairs = [(args.fleet, os.path.join(args.baselines, "BENCH_fleet.json"),
               fleet_metrics),
              (args.grid, os.path.join(args.baselines, "BENCH_grid.json"),
-              grid_metrics)]
+              grid_metrics),
+             (args.train, os.path.join(args.baselines, "BENCH_train.json"),
+              train_metrics)]
     # every expected artifact must exist — a benchmark job that silently
     # stopped writing its JSON must not turn the gate into a partial no-op
     absent = [b for b, _, _ in pairs if not os.path.exists(b)]
     if absent:
         for b in absent:
             print(f"FAIL missing benchmark artifact {b}; run "
-                  f"benchmarks.fleet_scale / benchmarks.grid_sweep first")
+                  f"benchmarks.fleet_scale / benchmarks.grid_sweep / "
+                  f"benchmarks.train_e2e first")
         return 2
 
     if args.update:
@@ -245,6 +306,7 @@ def main(argv=None) -> int:
         ok &= check_pair(bench, baseline, extract, args.tolerance)
     ok &= check_telemetry_overhead(_load(args.fleet), args.telemetry_floor)
     ok &= check_grid_speedup(_load(args.grid), args.grid_speedup_floor)
+    ok &= check_train_floor(_load(args.train), args.train_floor)
     print("benchmark regression gate: " + ("PASS" if ok else "FAIL"))
     return 0 if ok else 1
 

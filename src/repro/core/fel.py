@@ -1,6 +1,7 @@
 """Federated-edge-learning trainer: wires dataset + runtime + coded step.
 
-Supports the paper's three schemes under identical sampled worker behaviour:
+Supports the paper's four schemes under identical sampled worker behaviour
+(the ``CodingScheme`` registry, ``repro.sim.cluster.SCHEMES``):
   * 'two-stage'  — TSDCFL (the paper's contribution)
   * 'cyclic'     — Cyclic Repetition baseline
   * 'fractional' — Fractional Repetition baseline

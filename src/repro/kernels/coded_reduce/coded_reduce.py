@@ -9,6 +9,12 @@ the adds.
 
   grid = (D/Bd,) 'parallel'; weights prefetched whole (n_slots ≤ a few
   hundred) as a (n_slots, 1) VMEM operand.
+
+Arbitrary D is supported: the wrapper zero-pads the feature axis up to the
+next block_d multiple before the pallas_call and slices the padding back
+off — real gradient payloads (a flattened model pytree) are almost never a
+multiple of the tile width, and zero columns contribute nothing to the
+weighted sum.
 """
 from __future__ import annotations
 
@@ -37,18 +43,21 @@ def coded_reduce_pallas(g, w, *, block_d: int = 512,
     """g: (n_slots, D); w: (n_slots,) -> (D,) f32."""
     n_slots, D = g.shape
     block_d = min(block_d, D)
-    assert D % block_d == 0
+    pad = -D % block_d
+    if pad:
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+    Dp = D + pad
     out = pl.pallas_call(
         coded_reduce_kernel,
-        grid=(D // block_d,),
+        grid=(Dp // block_d,),
         in_specs=[
             pl.BlockSpec((n_slots, block_d), lambda di: (0, di)),
             pl.BlockSpec((n_slots, 1), lambda di: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_d), lambda di: (0, di)),
-        out_shape=jax.ShapeDtypeStruct((1, D), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((1, Dp), jnp.float32),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(g, w.reshape(n_slots, 1))
-    return out[0]
+    return out[0, :D]

@@ -61,6 +61,11 @@ class FleetSummary:
     # trailing defaults keep older positional constructions working
     jain_fairness: float = 1.0       # Jain index over admitted bytes
     mean_queue_residual: float = 0.0  # mean end-of-epoch Q_m backlog
+    # epochs whose decode failed: the paper's *no-op steps* — wall-clock
+    # burned with no model progress (``CodedTrainer`` leaves params
+    # untouched on these).  Absolute count across the fleet; the rate is
+    # ``decode_failure_rate``.
+    noop_steps: int = 0
 
     def row(self) -> str:
         return (f"{self.scenario:<30s} {self.scheme:<10s} "
@@ -70,6 +75,7 @@ class FleetSummary:
                 f"{100 * self.comm_fraction:4.1f}%) "
                 f"p95={self.p95_time:6.3f} slots={self.mean_slots:5.1f} "
                 f"fail={self.decode_failure_rate:.2f} "
+                f"noop={self.noop_steps:d} "
                 f"jain={self.jain_fairness:.3f}")
 
 
@@ -107,7 +113,8 @@ def summarize_fleet(scenario: str, scheme: str, n_seeds: int,
         decode_failure_rate=failures / max(len(results), 1),
         mean_stragglers=float(np.mean(strag)),
         jain_fairness=fleet_fairness(results),
-        mean_queue_residual=mean_queue_residual(results))
+        mean_queue_residual=mean_queue_residual(results),
+        noop_steps=failures)
 
 
 def run_fleet(scenario, scheme: str = "two-stage", *,

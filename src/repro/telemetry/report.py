@@ -29,8 +29,8 @@ __all__ = ["load_runs", "run_row", "fleet_table", "main"]
 
 _HEADER = (f"{'scenario':<28s} {'scheme':<10s} {'engine':<8s} "
            f"{'lanes':>5s} {'epochs':>6s} {'fairness':>8s} "
-           f"{'backlog':>8s} {'util':>6s} {'fail':>5s} {'slots':>7s} "
-           f"{'compiles':>8s}")
+           f"{'backlog':>8s} {'util':>6s} {'fail':>5s} {'noop':>5s} "
+           f"{'slots':>7s} {'compiles':>8s}")
 
 
 def load_runs(paths: Iterable[str]) -> List[dict]:
@@ -90,6 +90,9 @@ def run_row(run: dict) -> Dict[str, object]:
         "decode_failure_rate": (
             sum(1 for e in epochs if not e["decode_ok"])
             / max(len(epochs), 1)),
+        # absolute count of the paper's no-op steps: epochs that burned
+        # wall-clock without a model update (decode failed)
+        "noop_steps": sum(1 for e in epochs if not e["decode_ok"]),
         "mean_slots": float(np.mean(slots)) if slots else 0.0,
         "compiles": int(sum(run["compiles"].values())),
     }
@@ -104,8 +107,8 @@ def fleet_table(runs: Iterable[dict]) -> str:
             f"{r['scenario']:<28s} {r['scheme']:<10s} {r['engine']:<8s} "
             f"{r['lanes']:>5d} {r['epochs']:>6d} {r['fairness']:>8.4f} "
             f"{r['backlog']:>8.3f} {r['utilization']:>6.3f} "
-            f"{r['decode_failure_rate']:>5.2f} {r['mean_slots']:>7.1f} "
-            f"{r['compiles']:>8d}")
+            f"{r['decode_failure_rate']:>5.2f} {r['noop_steps']:>5d} "
+            f"{r['mean_slots']:>7.1f} {r['compiles']:>8d}")
     return "\n".join(lines)
 
 

@@ -1,0 +1,21 @@
+"""Coded-training bridge: real-model partial gradients through the co-sim.
+
+The first vertical slice connecting the two halves of the repo (DESIGN.md
+§3.10): per-shard gradients of a real jax model (``repro.models``) flow
+through the closed-loop edge co-simulator (``repro.sim``) under the
+paper's coding schemes, are decoded by the ``coded_reduce`` Pallas kernel
+and produce loss-vs-simulated-wall-clock curves per scheme — the paper's
+headline Fig 5e/6e claim, end-to-end.
+"""
+from repro.train.coded_trainer import CodedTrainer, TrainEpochLog
+from repro.train.curves import (curve_dict, loss_curve, running_best,
+                                time_to_target)
+from repro.train.partition import (DEFAULT_BYTES_PER_UNIT, GradPartition,
+                                   flatten_grads, payload_units,
+                                   shard_assignment)
+
+__all__ = [
+    "CodedTrainer", "TrainEpochLog", "GradPartition", "flatten_grads",
+    "shard_assignment", "payload_units", "DEFAULT_BYTES_PER_UNIT",
+    "loss_curve", "running_best", "time_to_target", "curve_dict",
+]

@@ -5,7 +5,7 @@ import json
 import pytest
 
 from benchmarks.check_regression import (compare, fleet_metrics,
-                                         grid_metrics, main)
+                                         grid_metrics, main, train_metrics)
 
 FLEET = {
     "scenarios": {
@@ -29,6 +29,13 @@ GRID = {
     "per_cell": {"seconds": 2.0, "cells_per_sec": 20.0},
     "speedup": 2.0,
 }
+TRAIN = {
+    "scenario": "bursty-stragglers", "model": "train-e2e-tiny",
+    "target_loss": 29.86, "n_seeds": 5, "n_epochs": 2,
+    "schemes": {"two-stage": {"time_to_target": 5.4, "noop_epochs": 0}},
+    "speedup_vs_uncoded": 1.34,
+    "speedup_vs_cyclic": 1.40,
+}
 
 
 def test_metric_extraction():
@@ -40,6 +47,9 @@ def test_metric_extraction():
     assert gm == {"grid.grouped.cells_per_sec": 40.0,
                   "grid.per_cell.cells_per_sec": 20.0,
                   "grid.speedup": 2.0}
+    tm = train_metrics(TRAIN)
+    assert tm == {"train.speedup_vs_uncoded": 1.34,
+                  "train.speedup_vs_cyclic": 1.40}
 
 
 def test_compare_classifies_failures_missing_and_new():
@@ -59,10 +69,13 @@ def bench_dir(tmp_path):
     """Artifacts + matching baselines written via the tool's own --update."""
     fleet = tmp_path / "BENCH_fleet.json"
     grid = tmp_path / "BENCH_grid.json"
+    train = tmp_path / "BENCH_train.json"
     fleet.write_text(json.dumps(FLEET))
     grid.write_text(json.dumps(GRID))
+    train.write_text(json.dumps(TRAIN))
     baselines = tmp_path / "baselines"
     assert main(["--fleet", str(fleet), "--grid", str(grid),
+                 "--train", str(train),
                  "--baselines", str(baselines), "--update"]) == 0
     return tmp_path
 
@@ -70,6 +83,7 @@ def bench_dir(tmp_path):
 def _argv(tmp_path, extra=()):
     return ["--fleet", str(tmp_path / "BENCH_fleet.json"),
             "--grid", str(tmp_path / "BENCH_grid.json"),
+            "--train", str(tmp_path / "BENCH_train.json"),
             "--baselines", str(tmp_path / "baselines"), *extra]
 
 
@@ -157,9 +171,40 @@ def test_grid_speedup_gate_fails_on_missing_metric(bench_dir, capsys):
     assert "no 'speedup' field" in capsys.readouterr().out
 
 
+def test_train_floor_gate_trips_below_absolute_floor(bench_dir, capsys):
+    """Two-stage losing the wall-clock race must fail on the absolute
+    floor even when the committed baseline itself recorded the loss."""
+    slow = copy.deepcopy(TRAIN)
+    slow["speedup_vs_uncoded"] = 0.9            # two-stage loses
+    (bench_dir / "BENCH_train.json").write_text(json.dumps(slow))
+    # regenerate baselines from the regressed artifact: relative gates
+    # all pass, only the absolute floor catches it
+    assert main(_argv(bench_dir, ["--update"])) == 0
+    assert main(_argv(bench_dir)) == 1
+    out = capsys.readouterr().out
+    assert "FAIL train speedup vs uncoded" in out
+    assert "train speedup vs cyclic: 1.40x" in out   # other key still ok
+    # a relaxed floor clears the same artifact
+    assert main(_argv(bench_dir, ["--train-floor", "0.8"])) == 0
+
+
+def test_train_floor_gate_fails_on_missing_fields(bench_dir, capsys):
+    """Dropping the speedup fields must not turn the train floor into a
+    silent no-op (e.g. train_e2e run without the two-stage scheme)."""
+    bare = copy.deepcopy(TRAIN)
+    del bare["speedup_vs_uncoded"]
+    del bare["speedup_vs_cyclic"]
+    (bench_dir / "BENCH_train.json").write_text(json.dumps(bare))
+    assert main(_argv(bench_dir)) == 1
+    out = capsys.readouterr().out
+    assert "no 'speedup_vs_uncoded' field" in out
+    assert "no 'speedup_vs_cyclic' field" in out
+
+
 def test_missing_artifacts_is_a_usage_error(tmp_path):
     assert main(["--fleet", str(tmp_path / "nope.json"),
                  "--grid", str(tmp_path / "nope2.json"),
+                 "--train", str(tmp_path / "nope3.json"),
                  "--baselines", str(tmp_path)]) == 2
 
 
@@ -185,3 +230,9 @@ def test_committed_baselines_cover_smoke_metrics():
         grid = json.load(f)["metrics"]
     assert "grid.grouped.cells_per_sec" in grid
     assert "grid.speedup" in grid
+    with open(f"{cr.BASELINE_DIR}/BENCH_train.json") as f:
+        train = json.load(f)["metrics"]
+    for key in cr.TRAIN_SPEEDUP_KEYS:
+        assert f"train.{key}" in train
+        # the committed snapshot itself satisfies the absolute floor
+        assert train[f"train.{key}"] >= cr.TRAIN_SPEEDUP_FLOOR

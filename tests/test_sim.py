@@ -300,13 +300,27 @@ def test_fleet_summary_row_formatting():
         mean_time=1.234, std_time=0.1, p50_time=1.2, p95_time=1.9,
         mean_compute_time=0.9, mean_comm_time=0.334, comm_fraction=0.27,
         mean_utilization=0.5, mean_slots=12.0, decode_failure_rate=0.125,
-        mean_stragglers=1.0)
+        mean_stragglers=1.0, noop_steps=3)
     row = s.row()
     assert "flash-crowd" in row and "two-stage" in row
     assert "time= 1.234±0.100" in row
     assert "comp= 0.900" in row and "comm= 0.334" in row
     assert "27.0%" in row and "p95= 1.900" in row
     assert "slots= 12.0" in row and "fail=0.12" in row
+    assert "noop=3" in row
+
+
+def test_fleet_noop_steps_counts_decode_failures():
+    """``noop_steps`` is the absolute count of the paper's no-op steps —
+    epochs whose decode failed — and stays consistent with the rate."""
+    clean = run_fleet(scenario_spec("homogeneous"), "uncoded",
+                      n_seeds=2, n_epochs=2)
+    assert clean.noop_steps == 0 and clean.decode_failure_rate == 0.0
+    faulty = run_fleet(scenario_spec("homogeneous").with_overrides(
+        fault_prob=0.9), "uncoded", n_seeds=2, n_epochs=2)
+    n = faulty.n_seeds * faulty.n_epochs
+    assert faulty.noop_steps == round(faulty.decode_failure_rate * n)
+    assert faulty.noop_steps > 0      # uncoded can't survive dead workers
 
 
 def test_small_fleet_p95_is_an_observed_epoch_time():

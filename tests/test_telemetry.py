@@ -254,8 +254,12 @@ def test_jsonl_sink_report_roundtrip(tmp_path):
     assert row["lanes"] == len(SEEDS)
     assert row["epochs"] == len(SEEDS) * N_EPOCHS
     assert 0.0 < row["fairness"] <= 1.0
+    # no-op-step column: absolute count consistent with the failure rate
+    assert row["noop_steps"] == round(
+        row["decode_failure_rate"] * row["epochs"])
     table = fleet_table(runs)
     assert "saturated-uplink" in table and "fairness" in table
+    assert "noop" in table
     # every line the sink wrote is valid JSON (JSONL contract)
     for line in path.read_text().splitlines():
         json.loads(line)

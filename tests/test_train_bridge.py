@@ -1,0 +1,224 @@
+"""Coded training bridge acceptance tests (DESIGN.md §3.10).
+
+The ISSUE's contract, pinned per scheme:
+
+  * decode success ⟹ the decoded gradient equals the uncoded full-batch
+    gradient (sum of the per-shard partial gradients) to allclose;
+  * decode failure ⟹ the paper's *no-op step*: params and optimizer
+    state are bit-identical to before the epoch;
+  * the payload the co-sim drains is *measured* from the flattened
+    gradient, not the scenario's synthetic ``grad_bytes`` constant.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticLMDataset
+from repro.models.transformer import init_params
+from repro.optim.optimizers import adamw
+from repro.sim.cluster import SCHEMES
+from repro.sim.scenarios import scenario_spec
+from repro.telemetry.recorder import FleetRecorder
+from repro.train import (CodedTrainer, GradPartition, TrainEpochLog,
+                         curve_dict, flatten_grads, loss_curve,
+                         payload_units, running_best, shard_assignment,
+                         time_to_target)
+from repro.train.coded_trainer import (decode_weights_from_result,
+                                       effective_code_matrix)
+
+#: One-layer model: big enough to exercise a real pytree (~23k params),
+#: small enough that the 4-scheme sweep stays in CI smoke budget.
+TINY = ModelConfig(
+    name="bridge-test-tiny", family="dense",
+    n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+    d_ff=64, vocab=64, remat="none", compute_dtype="float32")
+
+SCENARIO = "bursty-stragglers"
+
+
+def _trainer(scheme, *, seed=0, spec=None, telemetry=None):
+    spec = spec if spec is not None else scenario_spec(SCENARIO)
+    dataset = SyntheticLMDataset(K=spec.K, examples_per_partition=1,
+                                 seq_len=16, vocab=TINY.vocab, seed=0)
+    return CodedTrainer(TINY, spec, scheme, dataset, adamw(1e-2),
+                        seed=seed, telemetry=telemetry)
+
+
+# --------------------------------------------------------------------- #
+# partition: flatten/unflatten contract and measured payload
+# --------------------------------------------------------------------- #
+def test_grad_partition_roundtrip():
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    part = GradPartition.from_params(params)
+    flat = flatten_grads(params)
+    assert flat.shape == (part.D,) and part.payload_bytes == part.D * 4
+    back = part.unflatten(flat)
+    leaves_a = jax.tree.leaves(params)
+    leaves_b = jax.tree.leaves(back)
+    assert len(leaves_a) == len(leaves_b)
+    for a, b in zip(leaves_a, leaves_b):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b))
+
+
+def test_payload_units_validation():
+    assert payload_units(4 * 2 ** 20) == 1.0
+    assert payload_units(2 ** 20, 2 ** 21) == 0.5
+    with pytest.raises(ValueError, match="positive"):
+        payload_units(0.0)
+    with pytest.raises(ValueError, match="positive"):
+        payload_units(1.0, -4.0)
+
+
+def test_shard_assignment_reads_coding_matrix():
+    from repro.core.coding import cyclic_repetition
+    scheme = cyclic_repetition(6, 2)
+    assign = shard_assignment(scheme)
+    assert len(assign) == 6
+    # CRS(M, s): every worker computes exactly s+1 shards
+    assert all(len(a) == 3 for a in assign)
+    # and collectively they cover every shard
+    assert set(np.concatenate(assign).tolist()) == set(range(6))
+
+
+def test_measured_grad_bytes_reaches_the_cluster():
+    """The spec the cluster is built from carries the *measured* payload
+    (flattened-gradient bytes / bytes_per_unit), not the synthetic
+    default — and scaling the calibration rescales it exactly."""
+    base = scenario_spec(SCENARIO)
+    tr = _trainer("two-stage")
+    assert tr.grad_bytes == pytest.approx(
+        tr.partition.payload_bytes / (4 * 2 ** 20))
+    assert tr.spec.comm.grad_bytes == pytest.approx(tr.grad_bytes)
+    assert tr.spec.comm.grad_bytes != base.comm.grad_bytes
+    dataset = SyntheticLMDataset(K=base.K, examples_per_partition=1,
+                                 seq_len=16, vocab=TINY.vocab, seed=0)
+    half = CodedTrainer(TINY, base, "two-stage", dataset, adamw(1e-2),
+                        bytes_per_unit=2 * 4 * 2 ** 20)
+    assert half.grad_bytes == pytest.approx(tr.grad_bytes / 2)
+
+
+def test_trainer_rejects_mismatched_dataset():
+    spec = scenario_spec(SCENARIO)
+    bad = SyntheticLMDataset(K=spec.K + 1, examples_per_partition=1,
+                             seq_len=16, vocab=TINY.vocab, seed=0)
+    with pytest.raises(ValueError, match="partitions"):
+        CodedTrainer(TINY, spec, "two-stage", bad, adamw(1e-2))
+
+
+# --------------------------------------------------------------------- #
+# the acceptance pin: decode success ⟹ exact full-batch gradient
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_decoded_gradient_matches_uncoded_full_batch(scheme):
+    tr = _trainer(scheme)
+    log = tr.run_epoch(0)
+    assert log.decode_ok          # bursty-stragglers: slow, never dead
+    assert tr.last_decoded is not None
+    np.testing.assert_allclose(tr.last_decoded, tr.last_full_grad,
+                               rtol=2e-4, atol=2e-4)
+    # decode identity on the epoch's own plan: aᵀ·B_eff = 1ᵀ
+    result = tr.cluster.run_epoch(1)
+    if result.decode_ok:
+        B_eff = effective_code_matrix(result, tr.dataset.K)
+        a = decode_weights_from_result(result)
+        np.testing.assert_allclose(a @ B_eff, np.ones(tr.dataset.K),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_losses_identical_across_schemes_first_epoch(scheme):
+    """Exact recovery ⟹ every scheme sees the same loss trajectory; the
+    schemes differ only in wall-clock (the paper's Fig 5a vs 5e split)."""
+    ref = _trainer("uncoded")
+    tr = _trainer(scheme)
+    log_ref, log = ref.run_epoch(0), tr.run_epoch(0)
+    assert log.loss == pytest.approx(log_ref.loss, rel=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# the acceptance pin: decode failure ⟹ bit-identical no-op step
+# --------------------------------------------------------------------- #
+def test_decode_failure_is_bit_identical_noop():
+    spec = scenario_spec(SCENARIO).with_overrides(fault_prob=1.0)
+    tr = _trainer("two-stage", spec=spec)
+    params_before, opt_before = tr.params, tr.opt_state
+    flat_before = np.asarray(flatten_grads(tr.params))
+    log = tr.run_epoch(0)
+    assert not log.decode_ok and math.isnan(log.loss)
+    assert tr.noop_steps == 1 and tr.last_decoded is None
+    # the very same objects — nothing was applied, not even a copy
+    assert tr.params is params_before
+    assert tr.opt_state is opt_before
+    np.testing.assert_array_equal(np.asarray(flatten_grads(tr.params)),
+                                  flat_before)
+    # but simulated wall-clock was burned all the same
+    assert log.time > 0.0
+
+
+def test_successful_epoch_moves_params():
+    tr = _trainer("two-stage")
+    flat_before = np.asarray(flatten_grads(tr.params))
+    log = tr.run_epoch(0)
+    assert log.decode_ok
+    assert not np.array_equal(np.asarray(flatten_grads(tr.params)),
+                              flat_before)
+
+
+# --------------------------------------------------------------------- #
+# telemetry attribution
+# --------------------------------------------------------------------- #
+def test_bridge_phases_recorded_as_spans():
+    rec = FleetRecorder(scenario=SCENARIO, scheme="two-stage")
+    tr = _trainer("two-stage", telemetry=rec)
+    tr.run(1)
+    names = {s.name for s in rec.spans}
+    assert {"shard_grads", "encode", "decode_reduce",
+            "optimizer_step"} <= names
+    # the cluster threads its own phase spans through the same recorder
+    assert {"compute_phase", "comm", "decode"} <= names
+
+
+# --------------------------------------------------------------------- #
+# curves and time-to-target
+# --------------------------------------------------------------------- #
+def _log(epoch, loss, t, ok=True):
+    return TrainEpochLog(epoch=epoch, loss=loss, time=t, compute_time=t,
+                         comm_time=0.0, decode_ok=ok, n_slots=4,
+                         grad_bytes=0.1)
+
+
+def test_loss_curve_and_time_to_target():
+    logs = [_log(0, 5.0, 2.0), _log(1, float("nan"), 3.0, ok=False),
+            _log(2, 3.0, 1.0)]
+    times, losses = loss_curve(logs)
+    assert times == [2.0, 5.0, 6.0]
+    assert running_best(losses) == [5.0, 5.0, 3.0]   # NaN inherits best
+    assert time_to_target(logs, 5.0) == 2.0
+    assert time_to_target(logs, 4.0) == 6.0
+    assert time_to_target(logs, 1.0) == math.inf
+    d = curve_dict(logs)
+    assert d["loss"][1] is None and d["noop_epochs"] == 1
+    assert d["decode_ok"] == [True, False, True]
+    assert d["best_loss"] == [5.0, 5.0, 3.0]
+
+
+def test_curve_dict_all_noop_is_json_clean():
+    import json
+    logs = [_log(0, float("nan"), 1.0, ok=False)]
+    d = curve_dict(logs)
+    assert d["loss"] == [None] and d["best_loss"] == [None]
+    json.dumps(d)                    # strict JSON, no NaN/inf leakage
+
+
+def test_run_returns_per_epoch_logs():
+    tr = _trainer("cyclic")
+    logs = tr.run(2)
+    assert [log.epoch for log in logs] == [0, 1] and tr.logs == logs
+    for log in logs:
+        assert log.grad_bytes == pytest.approx(tr.grad_bytes)
+        assert log.time >= log.comm_time >= 0.0
