@@ -36,6 +36,14 @@ by one, regardless of what any baseline recorded — the guard that keeps
 the grouping-regression fix from silently regressing again.
 ``--grid-speedup-floor`` / env ``GRID_SPEEDUP_FLOOR`` override it.
 
+The fleet artifact's ``megafleet`` section (device-resident engine
+seeds/sec at 1k+ fleet sizes, ``benchmarks.fleet_scale``) is gated by a
+dedicated floor: the 1000-seed row must stay at or above the committed
+baseline × ``--megafleet-floor`` (default 0.7), and a missing row or a
+missing baseline metric fails — the mega-fleet regime cannot silently
+drop out of CI.  ``--megafleet-floor`` / env ``MEGAFLEET_FLOOR``
+override the fraction.
+
 The train artifact's two-stage time-to-target speedups vs the uncoded and
 cyclic baselines (``benchmarks.train_e2e`` under ``bursty-stragglers``)
 are gated the same two ways: relative to committed baselines *and*
@@ -67,6 +75,11 @@ GRID_SPEEDUP_FLOOR = 1.0
 #: Absolute floor on the two-stage time-to-target speedup vs the uncoded
 #: and cyclic baselines: the paper's headline wall-clock claim.
 TRAIN_SPEEDUP_FLOOR = 1.0
+#: Fraction of the committed baseline the 1000-seed megafleet row's
+#: seeds/sec must reach (device-resident engine, ``fleet_scale``).
+MEGAFLEET_FLOOR = 0.7
+#: The gated megafleet metric (the CI smoke row).
+MEGAFLEET_KEY = "fleet.megafleet.1000.seeds_per_sec"
 #: The train-artifact speedup fields the floor (and baselines) gate.
 TRAIN_SPEEDUP_KEYS = ("speedup_vs_uncoded", "speedup_vs_cyclic")
 BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
@@ -85,6 +98,10 @@ def fleet_metrics(data: dict) -> dict:
                 float(batched["seed_epochs_per_sec"])
         if "speedup" in row:
             out[f"fleet.{name}.speedup"] = float(row["speedup"])
+    for size, row in data.get("megafleet", {}).items():
+        if isinstance(row, dict) and "seeds_per_sec" in row:
+            out[f"fleet.megafleet.{size}.seeds_per_sec"] = \
+                float(row["seeds_per_sec"])
     return out
 
 
@@ -199,6 +216,35 @@ def check_grid_speedup(data: dict, floor: float) -> bool:
     return True
 
 
+def check_megafleet_floor(data: dict, baseline_metrics: dict,
+                          fraction: float) -> bool:
+    """Gate the 1000-seed megafleet row (device-resident engine) against
+    the committed baseline × ``fraction``.  Both a missing row in the
+    artifact and a missing baseline metric fail, so the mega-fleet
+    regime can neither silently stop being benchmarked nor run ungated."""
+    row = data.get("megafleet", {}).get("1000")
+    if not isinstance(row, dict) or "seeds_per_sec" not in row:
+        print("FAIL megafleet floor: no 1000-seed megafleet row in the "
+              "fleet artifact; run benchmarks.fleet_scale from this tree")
+        return False
+    base = baseline_metrics.get(MEGAFLEET_KEY)
+    if base is None:
+        print(f"FAIL megafleet floor: no committed baseline metric "
+              f"{MEGAFLEET_KEY}; bootstrap with --update")
+        return False
+    cur = float(row["seeds_per_sec"])
+    floor = float(base) * fraction
+    if cur < floor:
+        print(f"FAIL megafleet floor: 1000-seed device engine at "
+              f"{cur:.1f} seeds/sec < floor {floor:.1f} "
+              f"(baseline {float(base):.1f} x {fraction:.2f})")
+        return False
+    print(f"megafleet floor: 1000-seed device engine at {cur:.1f} "
+          f"seeds/sec >= floor {floor:.1f} "
+          f"(baseline {float(base):.1f} x {fraction:.2f})")
+    return True
+
+
 def check_train_floor(data: dict, floor: float) -> bool:
     """Gate the train artifact's two-stage time-to-target speedups against
     the absolute ``floor``: the paper's wall-clock claim must hold on
@@ -263,6 +309,13 @@ def main(argv=None) -> int:
                     help="absolute floor on the grid-sweep grouped/"
                          "per-cell speedup (1.0 = grouping must not lose; "
                          "env GRID_SPEEDUP_FLOOR overrides)")
+    ap.add_argument("--megafleet-floor", type=float,
+                    default=float(os.environ.get(
+                        "MEGAFLEET_FLOOR", MEGAFLEET_FLOOR)),
+                    help="fraction of the committed baseline the "
+                         "1000-seed megafleet seeds/sec must reach "
+                         "(0.7 = fail below 70%% of baseline; env "
+                         "MEGAFLEET_FLOOR overrides)")
     ap.add_argument("--train-floor", type=float,
                     default=float(os.environ.get(
                         "TRAIN_SPEEDUP_FLOOR", TRAIN_SPEEDUP_FLOOR)),
@@ -305,6 +358,11 @@ def main(argv=None) -> int:
             continue
         ok &= check_pair(bench, baseline, extract, args.tolerance)
     ok &= check_telemetry_overhead(_load(args.fleet), args.telemetry_floor)
+    fleet_baseline = os.path.join(args.baselines, "BENCH_fleet.json")
+    baseline_metrics = (_load(fleet_baseline).get("metrics", {})
+                        if os.path.exists(fleet_baseline) else {})
+    ok &= check_megafleet_floor(_load(args.fleet), baseline_metrics,
+                                args.megafleet_floor)
     ok &= check_grid_speedup(_load(args.grid), args.grid_speedup_floor)
     ok &= check_train_floor(_load(args.train), args.train_floor)
     print("benchmark regression gate: " + ("PASS" if ok else "FAIL"))

@@ -1,7 +1,7 @@
 """Fleet-scale sweep throughput: batched engines vs the event-driven oracle.
 
-Measures seed-epochs/sec for ``run_fleet`` under all three engines on two
-regimes of registry scenarios:
+Measures seed-epochs/sec for ``run_fleet`` under every engine in
+``repro.sim.ENGINES`` on two regimes of registry scenarios:
 
   * **comm-bound** (``saturated-uplink``, ``fading-uplink``): the epoch is
     dominated by the slotted uplink drain, where the oracle's per-slot
@@ -14,6 +14,12 @@ regimes of registry scenarios:
     the per-seed host loop of the oracle at 64 seeds on CPU); the
     ``hybrid`` engine (batched comm + host compute, PR-2 behaviour) is
     kept as the midpoint so the two contributions stay separable.
+
+A separate **megafleet** section times the device-resident engine
+(``engine="device"``, PR 9 — stop tracking folded into the scan carry)
+at 1k/10k-seed fleet sizes, reporting seeds/sec; the 1k row is gated by
+``check_regression.py --megafleet-floor`` against the committed
+baseline.
 
 All engines run identical seeds through identical randomness tapes, so the
 comparison is work-for-work, not statistically approximate.
@@ -34,7 +40,11 @@ import json
 import platform
 import time
 
-ENGINES = ("oracle", "hybrid", "batched")
+#: Engine timing order: oracle first (the speedup denominator), then the
+#: vectorized engines.  :func:`suite_engines` checks this against the one
+#: exported ``repro.sim.ENGINES`` tuple, so adding an engine without
+#: benchmarking it breaks the suite loudly instead of silently.
+ENGINE_ORDER = ("oracle", "hybrid", "batched", "device")
 
 #: (scenario, regime, n_seeds, n_epochs) rows.  The compute-bound rows run
 #: the full 64-seed fleet even in smoke mode — the ≥5× acceptance claim is
@@ -49,6 +59,21 @@ SMOKE = [
     ("homogeneous", "compute-bound", 64, 1),
     ("saturated-uplink", "comm-bound", 8, 1),
 ]
+
+#: Megafleet fleet sizes (seeds) for the device-resident engine.  CI
+#: smoke runs the 1k row (the one the regression floor gates); nightly's
+#: full suite adds the 10k row.
+MEGAFLEET_FULL = (1000, 10000)
+MEGAFLEET_SMOKE = (1000,)
+
+
+def suite_engines():
+    """``ENGINE_ORDER``, validated against ``repro.sim.ENGINES``."""
+    from repro.sim import ENGINES
+    if set(ENGINE_ORDER) != set(ENGINES):
+        raise RuntimeError(f"benchmark engine order {ENGINE_ORDER} is out "
+                           f"of sync with repro.sim.ENGINES {ENGINES}")
+    return ENGINE_ORDER
 
 
 def _time_engine(scenario: str, scheme: str, engine: str, n_seeds: int,
@@ -104,10 +129,34 @@ def telemetry_overhead(scenario: str, scheme: str = "two-stage",
             "throughput_ratio": disabled / enabled}
 
 
-def run_suite(rows, scheme: str = "two-stage") -> dict:
+def megafleet_row(n_seeds: int, scheme: str = "two-stage",
+                  scenario: str = "homogeneous") -> dict:
+    """Device-resident mega-fleet throughput: one epoch over ``n_seeds``
+    lanes with ``engine="device"`` — the regime the in-carry stop tracker
+    exists for (the only per-chunk host traffic is one ``(S,)`` stop
+    mask).  End-to-end seeds/sec including cluster construction; CPU
+    today, and the same code path shards the seed axis via ``mesh=``
+    when more than one device is visible."""
+    from repro.sim import Fleet, scenario_spec
+    fleet = Fleet(scenario_spec(scenario))
+    seeds = tuple(range(n_seeds))
+    # warm the compile at the mega shape (jit caches key on (S, M))
+    fleet.run(scheme, seeds, n_epochs=1, engine="device")
+    t0 = time.perf_counter()
+    fleet.run(scheme, seeds, n_epochs=1, engine="device")
+    dt = time.perf_counter() - t0
+    return {"scenario": scenario, "scheme": scheme, "engine": "device",
+            "n_seeds": n_seeds, "n_epochs": 1, "seconds": dt,
+            "seeds_per_sec": n_seeds / dt}
+
+
+def run_suite(rows, scheme: str = "two-stage",
+              megafleet_sizes=()) -> dict:
     from repro.sim import BatchedFleet, scenario_spec
+    engines = suite_engines()
     out = {"config": {"rows": [list(r) for r in rows], "scheme": scheme,
-                      "engines": list(ENGINES),
+                      "engines": list(engines),
+                      "megafleet_sizes": list(megafleet_sizes),
                       "platform": platform.platform(),
                       "python": platform.python_version()},
            "scenarios": {}}
@@ -119,13 +168,15 @@ def run_suite(rows, scheme: str = "two-stage") -> dict:
                # deterministic, so one probe fleet reports it exactly
                "chunk": BatchedFleet(scenario_spec(name), scheme,
                                      [0]).chunk}
-        for engine in ENGINES:
+        for engine in engines:
             dt = _time_engine(name, scheme, engine, n_seeds, n_epochs)
             row[engine] = {"seconds": dt, "seed_epochs_per_sec": work / dt}
         row["speedup"] = (row["batched"]["seed_epochs_per_sec"]
                           / row["oracle"]["seed_epochs_per_sec"])
         row["speedup_vs_hybrid"] = (row["batched"]["seed_epochs_per_sec"]
                                     / row["hybrid"]["seed_epochs_per_sec"])
+        row["speedup_device"] = (row["device"]["seed_epochs_per_sec"]
+                                 / row["oracle"]["seed_epochs_per_sec"])
         out["scenarios"][name] = row
     # telemetry on/off overhead on the first row's scenario (homogeneous
     # in both curated suites) — the ≤5%% budget check_regression.py gates
@@ -133,12 +184,14 @@ def run_suite(rows, scheme: str = "two-stage") -> dict:
     out["telemetry"] = telemetry_overhead(name0, scheme,
                                           n_seeds=n_seeds0,
                                           n_epochs=n_epochs0)
+    out["megafleet"] = {str(n): megafleet_row(n, scheme)
+                        for n in megafleet_sizes}
     return out
 
 
 def main(report=None) -> None:
     """benchmarks.run hook: smoke-sized rows through the CSV contract."""
-    res = run_suite(SMOKE)
+    res = run_suite(SMOKE, megafleet_sizes=MEGAFLEET_SMOKE)
     for name, row in res["scenarios"].items():
         if report is not None:
             report(f"fleet_scale.{name}.batched",
@@ -150,6 +203,10 @@ def main(report=None) -> None:
         report("fleet_scale.telemetry.enabled",
                1e6 * tel["enabled"]["seconds"],
                f"ratio={tel['throughput_ratio']:.3f}")
+        for n, row in res["megafleet"].items():
+            report(f"fleet_scale.megafleet.{n}.device",
+                   1e6 * row["seconds"],
+                   f"seeds_per_sec={row['seeds_per_sec']:.1f}")
 
 
 def _cli() -> None:
@@ -163,6 +220,9 @@ def _cli() -> None:
     ap.add_argument("--scheme", default="two-stage")
     ap.add_argument("--scenarios", nargs="*", default=None,
                     help="restrict to these scenario names")
+    ap.add_argument("--megafleet-seeds", nargs="*", type=int, default=None,
+                    help="device-engine megafleet sizes (default: 1k in "
+                         "--smoke, 1k and 10k in the full suite)")
     ap.add_argument("--out", default="BENCH_fleet.json",
                     help="JSON artifact path")
     args = ap.parse_args()
@@ -177,7 +237,10 @@ def _cli() -> None:
              args.seeds if args.seeds is not None else s,
              args.epochs if args.epochs is not None else e)
             for n, regime, s, e in rows]
-    res = run_suite(rows, scheme=args.scheme)
+    sizes = (tuple(args.megafleet_seeds)
+             if args.megafleet_seeds is not None
+             else MEGAFLEET_SMOKE if args.smoke else MEGAFLEET_FULL)
+    res = run_suite(rows, scheme=args.scheme, megafleet_sizes=sizes)
     for name, row in res["scenarios"].items():
         # per-regime row: every engine's throughput plus the adaptive
         # comm-scan chunk the batched engines dispatched with
@@ -185,14 +248,20 @@ def _cli() -> None:
               f"oracle={row['oracle']['seed_epochs_per_sec']:8.2f} "
               f"hybrid={row['hybrid']['seed_epochs_per_sec']:8.2f} "
               f"batched={row['batched']['seed_epochs_per_sec']:8.2f} "
+              f"device={row['device']['seed_epochs_per_sec']:8.2f} "
               f"seed-epochs/s  speedup={row['speedup']:5.1f}x "
-              f"(vs hybrid {row['speedup_vs_hybrid']:4.2f}x)")
+              f"(vs hybrid {row['speedup_vs_hybrid']:4.2f}x, "
+              f"device {row['speedup_device']:5.1f}x)")
     tel = res["telemetry"]
     print(f"telemetry overhead     [{tel['scenario']}, batched] "
           f"on={tel['enabled']['seed_epochs_per_sec']:8.2f} "
           f"off={tel['disabled']['seed_epochs_per_sec']:8.2f} "
           f"seed-epochs/s  ratio={tel['throughput_ratio']:5.3f} "
           f"(budget >= 0.95)")
+    for n, row in res["megafleet"].items():
+        print(f"megafleet {int(n):6d} seeds [{row['scenario']}, device] "
+              f"{row['seeds_per_sec']:8.2f} seeds/s "
+              f"({row['seconds']:.2f}s/epoch)")
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 
 __all__ = ["abstract_mesh", "make_production_mesh", "make_mesh_from_str",
-           "batch_axes", "data_shards"]
+           "batch_axes", "data_shards", "fleet_mesh"]
 
 
 def abstract_mesh(axis_sizes: tuple, axis_names: tuple):
@@ -38,6 +38,19 @@ def make_mesh_from_str(spec: str):
     axes = {2: ("data", "model"), 3: ("pod", "data", "model")}[len(dims)]
     import jax
     return jax.make_mesh(dims, axes)
+
+
+def fleet_mesh(n_devices: int | None = None):
+    """1-D ``("seeds",)`` mesh for sharding a fleet's seed axis.
+
+    The co-simulator's batched engine treats one lane = one seed = one
+    user; ``device_comm`` ``shard_map``s its chunk scan over this mesh
+    (every in-scan op is per-lane, so shards never communicate).  Uses
+    every visible device by default; CPU hosts get multiple devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return jax.make_mesh((n,), ("seeds",))
 
 
 def batch_axes(mesh) -> tuple:

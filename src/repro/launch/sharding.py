@@ -27,7 +27,20 @@ from repro.configs.base import ModelConfig
 from repro.launch.mesh import batch_axes
 
 __all__ = ["rules_for", "param_shardings", "batch_shardings",
-           "cache_shardings", "logical_to_spec"]
+           "cache_shardings", "logical_to_spec", "seed_shardings"]
+
+
+def seed_shardings(mesh: Mesh) -> tuple:
+    """``(lane_sharded, replicated)`` NamedSharding pair for fleet arrays.
+
+    ``lane_sharded`` splits the leading seed axis of ``(S, …)`` fleet
+    state over the mesh's ``"seeds"`` axis (see
+    :func:`repro.launch.mesh.fleet_mesh`); ``replicated`` is for the
+    per-slot inputs every shard reads whole (e.g. the scan's slot-index
+    vector).  ``repro.sim.device_epoch`` builds its ``shard_map``
+    partition specs from the same axis name.
+    """
+    return (NamedSharding(mesh, P("seeds")), NamedSharding(mesh, P()))
 
 
 def rules_for(cfg: ModelConfig, mesh: Mesh, layout: str = "tp") -> dict:

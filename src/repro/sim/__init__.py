@@ -12,6 +12,12 @@ live cluster by :func:`build_cluster`; grids of :class:`ExperimentSpec`
 cells run through :func:`sweep`, which shares one scan compile per
 structural group (scheme, worker count, channel kind) — all other
 physics stack as per-lane scan inputs.
+
+The front door is the :class:`Fleet` facade (PR 9):
+``Fleet(spec).run(scheme, seeds, engine=...)`` dispatches any engine in
+:data:`ENGINES` — including ``"device"``, the device-resident epoch tail
+that can ``shard_map`` the seed axis across devices — with
+``run_fleet``/``record_fleet``/``BatchedFleet`` kept as thin wrappers.
 """
 from .events import Event, EventEngine, COMPUTE_DONE, SLOT_TICK
 from .channel import (ChannelModel, CommTape, GilbertElliottChannel,
@@ -21,11 +27,11 @@ from .spec import (ChannelSpec, CommSpec, ComputeSpec, EnergySpec,
                    ExperimentSpec, GilbertElliottChannelSpec, ScenarioSpec,
                    StaticChannelSpec, TraceChannelSpec, as_channel_spec,
                    build_cluster, split_comm_params)
-from .scenarios import (available_scenarios, get_scenario, make_cluster,
-                        register_scenario, resolve_scenario, scenario_spec,
-                        SCENARIOS)
+from .scenarios import (available_scenarios, register_scenario,
+                        resolve_scenario, scenario_spec, SCENARIOS)
 from .batched import (BatchedFleet, pick_chunk, run_fleet_batched,
                       scan_trace_count, reset_scan_compile_cache)
+from .fleet import ENGINES, Fleet, FleetRun, validate_engine
 from .batched_compute import (batched_comm_jobs, batched_compute_phase,
                               compute_group_key)
 from .montecarlo import (FleetSummary, compare_schemes, run_experiment,
@@ -41,10 +47,11 @@ __all__ = [
     "ExperimentSpec", "GilbertElliottChannelSpec", "ScenarioSpec",
     "StaticChannelSpec", "TraceChannelSpec", "as_channel_spec",
     "build_cluster", "split_comm_params",
-    "SCENARIOS", "available_scenarios", "get_scenario", "make_cluster",
+    "SCENARIOS", "available_scenarios",
     "register_scenario", "resolve_scenario", "scenario_spec",
     "BatchedFleet", "pick_chunk", "run_fleet_batched", "scan_trace_count",
     "reset_scan_compile_cache",
+    "ENGINES", "Fleet", "FleetRun", "validate_engine",
     "batched_comm_jobs", "batched_compute_phase", "compute_group_key",
     "FleetSummary", "run_fleet", "run_experiment", "compare_schemes",
     "summarize_fleet",

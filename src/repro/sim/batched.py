@@ -376,6 +376,70 @@ _SERIES_OUT = {"Q": "Q", "H": "H", "E": "E", "admitted": "d",
                "transmitted": "c", "pending": "pend"}
 
 
+def _visible_slots(jobs: Sequence[CommJob],
+                   physics: _StackedPhysics) -> np.ndarray:
+    """Slot at which each worker's payload becomes visible to the
+    scheduler: first ``k`` on that lane's clock with ``k*T >= ready``
+    (ties fire before the tick, matching the oracle's heap ordering);
+    ``>=`` the lane's slot cap ⟹ never within this epoch.  Each lane
+    searches its own slot grid — lanes may tick at different ``slot_T``.
+    """
+    ready = np.stack([j.ready_time for j in jobs])             # (S, M) f64
+    grid_len = physics.grid_len
+    grids = {}                               # slot grid per distinct slot_T
+    visible = np.empty(ready.shape, np.int64)
+    for i, T_i in enumerate(physics.slot_T):
+        grid = grids.get(T_i)
+        if grid is None:
+            grid = grids[T_i] = np.arange(grid_len, dtype=np.float64) * T_i
+        visible[i] = np.searchsorted(grid, ready[i], side="left")
+    return visible
+
+
+def _draw_chunk_tapes(tapes, stopped: np.ndarray, k0: int,
+                      chunk: int) -> None:
+    """Advance each *still-running* seed's tape to cover this chunk — a
+    stopped seed's oracle run never drew it either, keeping the streams
+    aligned (chunks divide the tape block, so a chunk never forces a
+    block the oracle wouldn't have reached)."""
+    for i, t in enumerate(tapes):
+        if not stopped[i]:
+            t.ensure(k0 + chunk - 1)
+
+
+def _chunk_xs(clusters, tapes, k0: int, chunk: int, stateful: bool,
+              zero_rows: np.ndarray) -> dict:
+    """Per-slot scan inputs for one chunk: slot indices, harvest rows and
+    channel rows/rates, stacked ``(chunk, S, …)``.  Shared verbatim by
+    the host-tail and device-tail engines, so the randomness fed to the
+    scan cannot drift between them."""
+    def rows_or_zero(t, kind):
+        if t.n_drawn <= k0:
+            return zero_rows               # stopped before this block
+        rows = (t.harvest_rows(k0, chunk) if kind == "h"
+                else t.channel_rows(k0, chunk))
+        return rows if rows is not None else zero_rows
+
+    xs = {"k": jnp.arange(k0, k0 + chunk, dtype=jnp.int32),
+          "h": jnp.asarray(np.stack(
+              [rows_or_zero(t, "h") for t in tapes], axis=1),
+              jnp.float32)}
+    if stateful:
+        per_seed = [c.channel.tape_arrays(rows_or_zero(t, "ch"))
+                    for c, t in zip(clusters, tapes)]
+        xs["ch"] = {key: jnp.asarray(np.stack(
+            [d[key] for d in per_seed], axis=1))
+            for key in per_seed[0]}
+    else:
+        # per-lane rate rows: (chunk, S, M) — stateless channels of
+        # one class but different parameters stack freely
+        slots = np.arange(k0, k0 + chunk)
+        xs["r"] = jnp.asarray(np.stack(
+            [c.channel.rates_for_slots(slots) for c in clusters],
+            axis=1), jnp.float32)
+    return xs
+
+
 def _batched_comm(clusters: Sequence[EdgeCluster],
                   jobs: Sequence[CommJob],
                   chunk: Optional[int] = None, *,
@@ -391,20 +455,7 @@ def _batched_comm(clusters: Sequence[EdgeCluster],
     grid_len = physics.grid_len              # the oracle always runs slot 0
     stateful = c0.channel.stateful
 
-    ready = np.stack([j.ready_time for j in jobs])             # (S, M) f64
-    # slot at which each worker's payload becomes visible to the scheduler:
-    # first k on that lane's clock with k*T >= ready (ties fire before the
-    # tick, matching the oracle's heap ordering); >= the lane's slot cap
-    # ⟹ never within this epoch.  Each lane searches its own slot grid —
-    # lanes may tick at different slot_T.
-    grids = {}                               # slot grid per distinct slot_T
-    visible = np.empty((S, M), np.int64)
-    for i, T_i in enumerate(physics.slot_T):
-        grid = grids.get(T_i)
-        if grid is None:
-            grid = grids[T_i] = np.arange(grid_len, dtype=np.float64) * T_i
-        visible[i] = np.searchsorted(grid, ready[i], side="left")
-
+    visible = _visible_slots(jobs, physics)
     tapes = [CommTape(c.channel, c.engine.rng, c.comm.harvest_mean,
                       c.comm.harvest_jitter) for c in clusters]
 
@@ -432,38 +483,8 @@ def _batched_comm(clusters: Sequence[EdgeCluster],
         if tracker.done:
             break
         k0 = b * chunk
-        # only still-running seeds draw the tape covering this chunk — a
-        # stopped seed's oracle run never drew it either, keeping the
-        # streams aligned (chunks divide the tape block, so a chunk
-        # never forces a block the oracle wouldn't have reached)
-        for i, t in enumerate(tapes):
-            if not tracker.stopped[i]:
-                t.ensure(k0 + chunk - 1)
-
-        def rows_or_zero(t, kind):
-            if t.n_drawn <= k0:
-                return zero_rows           # stopped before this block
-            rows = (t.harvest_rows(k0, chunk) if kind == "h"
-                    else t.channel_rows(k0, chunk))
-            return rows if rows is not None else zero_rows
-
-        xs = {"k": jnp.arange(k0, k0 + chunk, dtype=jnp.int32),
-              "h": jnp.asarray(np.stack(
-                  [rows_or_zero(t, "h") for t in tapes], axis=1),
-                  jnp.float32)}
-        if stateful:
-            per_seed = [c.channel.tape_arrays(rows_or_zero(t, "ch"))
-                        for c, t in zip(clusters, tapes)]
-            xs["ch"] = {key: jnp.asarray(np.stack(
-                [d[key] for d in per_seed], axis=1))
-                for key in per_seed[0]}
-        else:
-            # per-lane rate rows: (chunk, S, M) — stateless channels of
-            # one class but different parameters stack freely
-            slots = np.arange(k0, k0 + chunk)
-            xs["r"] = jnp.asarray(np.stack(
-                [c.channel.rates_for_slots(slots) for c in clusters],
-                axis=1), jnp.float32)
+        _draw_chunk_tapes(tapes, tracker.stopped, k0, chunk)
+        xs = _chunk_xs(clusters, tapes, k0, chunk, stateful, zero_rows)
         carry, outs = runner(carry, xs, consts)
         outs_np = jax.tree.map(np.asarray, outs)
         tracker.consume(k0, outs_np)
@@ -503,7 +524,8 @@ class BatchedFleet:
     (``montecarlo.compare_schemes``).
 
     ``scenario`` is a :class:`~repro.sim.spec.ScenarioSpec` (registry
-    names are accepted as a deprecated shim).
+    names resolve via ``scenario_spec(name)``; the string shim was
+    removed in PR 9).
 
     ``compute`` selects the compute-phase engine: ``"batched"`` (default)
     vectorizes the two-stage planner/predictor/sampling across the fleet
@@ -518,18 +540,34 @@ class BatchedFleet:
     adaptively from the scenario physics (:func:`pick_chunk`); results
     are identical for every legal chunk (the chunk-invariance contract),
     so the knob only trades dispatch count against wasted slots.
+
+    ``tail`` selects where the per-slot stop tracking runs:
+    ``"host"`` (default) replays chunk outputs through the numpy
+    :class:`_StopTracker`; ``"device"`` folds the whole stop state
+    machine — byte ledgers, arrival masks, decode gates, stuck rule,
+    per-lane slot caps — into the scan carry
+    (``repro.sim.device_epoch``), so the host sees per-epoch outputs
+    only.  Bit-identical by contract (``tests/test_device_epoch.py``).
+    ``mesh`` (device tail only) shards the seed axis across devices
+    with ``shard_map``: a :class:`jax.sharding.Mesh` with a ``"seeds"``
+    axis, or ``"auto"`` to use every visible device.
+
+    Most callers should go through the :class:`~repro.sim.fleet.Fleet`
+    facade (``Fleet(spec).run(scheme, seeds, engine=...)``), which maps
+    engine names onto these knobs.
     """
 
     def __init__(self, scenario=None,
                  scheme: str = "two-stage", seeds: Sequence[int] = (0,),
                  *, clusters: Optional[Sequence[EdgeCluster]] = None,
                  compute: str = "batched", chunk: Optional[int] = None,
+                 tail: str = "host", mesh=None,
                  telemetry: Optional[FleetRecorder] = None,
                  **overrides):
         if clusters is None:
             if scenario is None:
                 raise ValueError("need a scenario spec or explicit clusters")
-            spec = resolve_scenario(scenario, overrides, warn_string=True)
+            spec = resolve_scenario(scenario, overrides)
             clusters = [build_cluster(spec, scheme, int(s)) for s in seeds]
         elif overrides:
             raise ValueError(
@@ -538,7 +576,15 @@ class BatchedFleet:
         if compute not in ("batched", "host"):
             raise ValueError(f"compute must be 'batched' or 'host', "
                              f"got {compute!r}")
+        if tail not in ("host", "device"):
+            raise ValueError(f"tail must be 'host' or 'device', "
+                             f"got {tail!r}")
+        if mesh is not None and tail != "device":
+            raise ValueError("mesh= requires tail='device' (the host tail "
+                             "never shards the seed axis)")
         self.compute = compute
+        self.tail = tail
+        self.mesh = mesh
         clusters = list(clusters)
         if not clusters:
             raise ValueError("need at least one cluster")
@@ -587,9 +633,19 @@ class BatchedFleet:
             else:
                 jobs = [c.comm_job(epoch) for c in self.clusters]
         with phase_span(rec, "comm", epoch=epoch):
-            stats = _batched_comm(self.clusters, jobs, self.chunk,
-                                  physics=self._physics,
-                                  telemetry=rec, epoch=epoch)
+            # per-slot series telemetry needs the chunk outputs the
+            # device tail deliberately never materializes — that one
+            # observability mode falls back to the (bit-identical)
+            # host tail
+            series = rec is not None and rec.wants_series
+            if self.tail == "device" and not series:
+                from repro.sim.device_epoch import device_comm
+                stats = device_comm(self.clusters, jobs, self.chunk,
+                                    physics=self._physics, mesh=self.mesh)
+            else:
+                stats = _batched_comm(self.clusters, jobs, self.chunk,
+                                      physics=self._physics,
+                                      telemetry=rec, epoch=epoch)
         with phase_span(rec, "decode", epoch=epoch):
             results = [job.assemble(st) for job, st in zip(jobs, stats)]
         if rec:
@@ -608,6 +664,6 @@ def run_fleet_batched(scenario, scheme: str = "two-stage", *,
                       chunk: Optional[int] = None,
                       **overrides) -> List[List[EpochResult]]:
     """Convenience wrapper: build a fleet and run it, [epoch][seed].
-    ``scenario`` is a ScenarioSpec (names accepted, deprecated)."""
+    ``scenario`` is a ScenarioSpec."""
     return BatchedFleet(scenario, scheme, seeds, compute=compute,
                         chunk=chunk, **overrides).run(n_epochs)

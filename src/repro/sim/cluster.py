@@ -49,7 +49,7 @@ from repro.sim.channel import ChannelModel, CommTape, StaticChannel
 from repro.sim.events import COMPUTE_DONE, SLOT_TICK, EventEngine
 from repro.telemetry.recorder import FleetRecorder, phase_span
 
-__all__ = ["CommJob", "CommParams", "CommStats", "EdgeCluster",
+__all__ = ["CommJob", "CommParams", "CommStats", "EdgeCluster", "GateSpec",
            "arrived_mask", "stuck_tolerance"]
 
 SCHEMES = ("two-stage", "cyclic", "fractional", "uncoded")
@@ -131,6 +131,34 @@ class CommParams:
     max_slots: int = 5000          # hard cap on comm slots per epoch
 
 
+@dataclasses.dataclass(frozen=True)
+class GateSpec:
+    """Count/mask form of a job's decode gate, evaluable inside a scan.
+
+    ``is_decodable`` is a host Python closure (it may call
+    ``decode_weights``); the device-resident epoch tail
+    (``repro.sim.device_epoch``) instead evaluates a mask/count predicate
+    per slot, built from this spec:
+
+        fires ⟺ has_work ∧ arrived[must].all()
+                        ∧ count(arrived[count_over]) >= need
+                        ∧ every FRS group in ``groups`` has an arrival
+
+    For every scheme the predicate equals the exact gate except for one
+    degenerate corner — a numerically ill-conditioned Vandermonde decode
+    succeeding below the count threshold via the least-squares fallback —
+    which the device engine guards by re-checking ``is_decodable`` on the
+    final arrival mask host-side (a mismatch raises rather than silently
+    diverging from the oracle).
+    """
+    kind: str                 # two-stage | vandermonde | fractional | uncoded
+    must: np.ndarray          # (n_must,) worker ids that must all arrive
+    count_over: np.ndarray    # (n,) worker ids the count applies to
+    need: int                 # arrivals needed among ``count_over``
+    groups: Optional[np.ndarray] = None   # (M,) FRS group id per worker
+    has_work: bool = True     # False ⟺ nothing was ever computed
+
+
 @dataclasses.dataclass
 class CommJob:
     """Comm-phase inputs + result assembly for one epoch, engine-agnostic.
@@ -139,11 +167,14 @@ class CommJob:
     been sampled; consumed either by the event-driven loop
     (:meth:`EdgeCluster._run_comm`) or by the batched scan
     (``repro.sim.batched``), both of which hand the resulting
-    :class:`CommStats` back to ``assemble``.
+    :class:`CommStats` back to ``assemble``.  ``gate`` is the
+    scan-evaluable form of ``is_decodable`` the device-resident tail
+    stacks into its carry (``repro.sim.device_epoch``).
     """
     ready_time: np.ndarray                       # (M,) gradient-ready times
     is_decodable: Callable[[np.ndarray], bool]   # arrival mask -> gate
     assemble: Callable[["CommStats"], EpochResult]
+    gate: Optional[GateSpec] = None
 
 
 @dataclasses.dataclass
@@ -317,7 +348,10 @@ class EdgeCluster:
             return self.runtime.result_from_phase(
                 ph, stats.arrived, stats.decode_time, comm=stats)
 
-        return CommJob(ph.ready_time, decodable, assemble)
+        gate = GateSpec(kind="two-stage", must=np.asarray(must, int),
+                        count_over=np.asarray(w2, int), need=int(need2),
+                        has_work=bool(len(must) > 0 or need2 > 0))
+        return CommJob(ph.ready_time, decodable, assemble, gate=gate)
 
     def job_from_static(self, t: np.ndarray) -> CommJob:
         """Comm job for sampled single-stage completion times ``t``."""
@@ -338,7 +372,20 @@ class EdgeCluster:
         def assemble(stats: CommStats) -> EpochResult:
             return self._static_result(scheme, t, tasks, stats)
 
-        return CommJob(t, decodable, assemble)
+        M = self.M
+        if scheme.kind == "uncoded":
+            gate = GateSpec(kind="uncoded", must=np.arange(M),
+                            count_over=np.zeros(0, int), need=0)
+        elif scheme.kind == "fractional":
+            gate = GateSpec(kind="fractional", must=np.zeros(0, int),
+                            count_over=np.zeros(0, int), need=0,
+                            groups=np.arange(M) // max(scheme.group_size, 1))
+        else:           # vandermonde (CRS): closed-form needs M - s alive;
+            # need >= 1 keeps the exact gate's any-arrived precheck
+            gate = GateSpec(kind="vandermonde", must=np.zeros(0, int),
+                            count_over=np.arange(M),
+                            need=max(M - scheme.s, 1))
+        return CommJob(t, decodable, assemble, gate=gate)
 
     # ------------------------------------------------------------------ #
     def run_epoch(self, epoch: int) -> EpochResult:

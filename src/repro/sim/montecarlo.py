@@ -17,27 +17,20 @@ exists for differential testing and as the drop-in fallback.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.runtime import EpochResult
-from repro.sim.batched import BatchedFleet
 from repro.sim.cluster import SCHEMES
+from repro.sim.fleet import ENGINES, Fleet
 from repro.sim.scenarios import resolve_scenario
-from repro.sim.spec import ExperimentSpec, build_cluster, fleet_seeds
+from repro.sim.spec import ExperimentSpec, fleet_seeds
 from repro.telemetry.metrics import fleet_fairness, mean_queue_residual
 from repro.telemetry.recorder import FleetRecorder
 
 __all__ = ["FleetSummary", "run_fleet", "run_experiment",
            "compare_schemes", "ENGINES"]
-
-#: ``batched`` — compute and comm phases both vectorized over seeds (the
-#: default); ``hybrid`` — per-seed host compute phase + batched comm scan
-#: (PR-2 behaviour, kept as the differential midpoint); ``oracle`` — the
-#: fully event-driven per-seed reference loop.  All three draw identical
-#: per-seed randomness tapes and produce identical per-epoch results.
-ENGINES = ("batched", "hybrid", "oracle")
 
 
 @dataclasses.dataclass
@@ -124,14 +117,12 @@ def run_fleet(scenario, scheme: str = "two-stage", *,
               **overrides) -> FleetSummary:
     """Monte-Carlo fleet: ``n_seeds`` clusters × ``n_epochs`` epochs.
 
-    ``scenario`` is a :class:`~repro.sim.spec.ScenarioSpec` (registry
-    names are accepted as a deprecated shim); ``**overrides`` are
-    validated spec-field overrides.  ``engine="batched"`` (default)
-    advances all seeds together through the vmap fleet engine — compute
-    *and* comm phases; ``engine="hybrid"`` batches only the comm phase
-    (per-seed host compute loop); ``engine="oracle"`` runs each seed
-    through the event-driven reference loop.  Same seeds, same tapes,
-    same results.
+    Thin wrapper over the :class:`~repro.sim.fleet.Fleet` facade, kept
+    for its established signature.  ``scenario`` is a
+    :class:`~repro.sim.spec.ScenarioSpec`; ``**overrides`` are validated
+    spec-field overrides.  ``engine`` is any of
+    :data:`~repro.sim.fleet.ENGINES`; all engines draw the same tapes
+    and produce the same results.
 
     ``telemetry`` optionally threads a
     :class:`~repro.telemetry.recorder.FleetRecorder` through whichever
@@ -141,29 +132,10 @@ def run_fleet(scenario, scheme: str = "two-stage", *,
     if n_seeds < 1 or n_epochs < 1:
         raise ValueError(f"need n_seeds >= 1 and n_epochs >= 1, got "
                          f"n_seeds={n_seeds}, n_epochs={n_epochs}")
-    if engine not in ENGINES:
-        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
-    spec = resolve_scenario(scenario, overrides, warn_string=True)
-    seeds = fleet_seeds(n_seeds, base_seed)
-    results: List[EpochResult] = []
-    if engine == "oracle":
-        for lane, s in enumerate(seeds):
-            cluster = build_cluster(spec, scheme, s)
-            if telemetry is not None:
-                cluster.telemetry_lane = lane
-                cluster.telemetry = telemetry
-            results.extend(cluster.run_epoch(e) for e in range(n_epochs))
-    else:
-        fleet = BatchedFleet(spec, scheme, seeds,
-                             compute=("host" if engine == "hybrid"
-                                      else "batched"),
-                             telemetry=telemetry)
-        per_epoch = fleet.run(n_epochs)                    # [epoch][seed]
-        # seed-major order, matching the oracle loop, so both engines feed
-        # the summary reductions identically (bitwise-equal summaries)
-        results.extend(per_epoch[e][i] for i in range(n_seeds)
-                       for e in range(n_epochs))
-    return summarize_fleet(spec.name, scheme, n_seeds, n_epochs, results)
+    run = Fleet(scenario, **overrides).run(
+        scheme, fleet_seeds(n_seeds, base_seed), n_epochs=n_epochs,
+        engine=engine, telemetry=telemetry)
+    return run.summary()
 
 
 def run_experiment(exp: ExperimentSpec, *,
@@ -177,7 +149,7 @@ def run_experiment(exp: ExperimentSpec, *,
 def compare_schemes(scenario, schemes: Optional[Sequence[str]] = None,
                     **kwargs) -> dict:
     """All schemes under one scenario/seed list → {scheme: FleetSummary}.
-    ``scenario`` is a ScenarioSpec (names accepted, deprecated)."""
-    spec = resolve_scenario(scenario, warn_string=True)
+    ``scenario`` is a ScenarioSpec."""
+    spec = resolve_scenario(scenario)
     return {s: run_fleet(spec, scheme=s, **kwargs)
             for s in (schemes or SCHEMES)}

@@ -13,24 +13,21 @@ coding (arXiv:2406.10831) and heterogeneous-straggler approximate coding
     spec = scenario_spec("fading-uplink")
     res = build_cluster(spec, scheme="two-stage", seed=3).run_epoch(0)
 
-``make_cluster``/``get_scenario`` survive as thin deprecated wrappers
-over the spec path (bit-identical results, enforced by
-``tests/test_spec.py``).
+The PR-3 string-keyed shims (``make_cluster``, ``get_scenario``, string
+scenarios through ``run_fleet``/``BatchedFleet``) warned for six PRs and
+were removed in PR 9 (DESIGN.md changelog): :func:`scenario_spec` is the
+one name → spec lookup, and every fleet entry point takes the spec.
 """
 from __future__ import annotations
 
-import warnings
-from typing import Dict, List, Union
+from typing import Dict, List
 
-from repro.sim.cluster import EdgeCluster
 from repro.sim.spec import (CommSpec, ComputeSpec, EnergySpec,
                             GilbertElliottChannelSpec, ScenarioSpec,
-                            StaticChannelSpec, TraceChannelSpec,
-                            build_cluster)
+                            StaticChannelSpec, TraceChannelSpec)
 
 __all__ = ["SCENARIOS", "register_scenario", "available_scenarios",
-           "scenario_spec", "resolve_scenario", "get_scenario",
-           "make_cluster"]
+           "scenario_spec", "resolve_scenario"]
 
 # default cluster size: the paper's 6-node edge cluster, K == M partitions
 _M = 6
@@ -63,48 +60,25 @@ def scenario_spec(name: str) -> ScenarioSpec:
                        f"available: {available_scenarios()}") from None
 
 
-def resolve_scenario(scenario: Union[str, ScenarioSpec],
-                     overrides: dict = None, *,
-                     warn_string: bool = False) -> ScenarioSpec:
-    """Coerce a registry name or a spec (plus validated overrides) into a
-    final :class:`ScenarioSpec` — the shared front door of ``run_fleet``,
-    ``BatchedFleet`` and the deprecated string wrappers."""
+def resolve_scenario(scenario: ScenarioSpec,
+                     overrides: dict = None) -> ScenarioSpec:
+    """Apply validated overrides to a :class:`ScenarioSpec` — the shared
+    front door of ``Fleet``/``run_fleet``/``BatchedFleet``.
+
+    Plain strings are rejected: the PR-3 string-keyed shims were removed
+    in PR 9 after six PRs of deprecation warnings.  Callers look names up
+    explicitly with ``scenario_spec(name)``.
+    """
     if isinstance(scenario, str):
-        if warn_string:
-            warnings.warn(
-                "string-keyed scenario APIs are deprecated; pass a "
-                "ScenarioSpec (repro.sim.scenario_spec(name)) instead",
-                DeprecationWarning, stacklevel=3)
-        scenario = scenario_spec(scenario)
-    elif not isinstance(scenario, ScenarioSpec):
-        raise TypeError(f"expected a scenario name or ScenarioSpec, got "
+        raise TypeError(
+            f"string-keyed scenario APIs were removed (PR 9); pass "
+            f"repro.sim.scenario_spec({scenario!r}) instead")
+    if not isinstance(scenario, ScenarioSpec):
+        raise TypeError(f"expected a ScenarioSpec, got "
                         f"{type(scenario).__name__}")
     if overrides:
         scenario = scenario.with_overrides(**overrides)
     return scenario
-
-
-# --------------------------------------------------------------------- #
-# deprecated string wrappers (thin shims over the spec path)
-# --------------------------------------------------------------------- #
-def get_scenario(name: str) -> ScenarioSpec:
-    """Deprecated alias of :func:`scenario_spec`."""
-    warnings.warn("get_scenario is deprecated; use scenario_spec(name)",
-                  DeprecationWarning, stacklevel=2)
-    return scenario_spec(name)
-
-
-def make_cluster(name: str, scheme: str = "two-stage", seed: int = 0,
-                 **overrides) -> EdgeCluster:
-    """Deprecated: build the named scenario's cluster for one scheme and
-    seed.  Equivalent to
-    ``build_cluster(scenario_spec(name).with_overrides(**overrides),
-    scheme, seed)`` — and bit-identical to it."""
-    warnings.warn(
-        "make_cluster is deprecated; use "
-        "build_cluster(scenario_spec(name), scheme=..., seed=...)",
-        DeprecationWarning, stacklevel=2)
-    return build_cluster(resolve_scenario(name, overrides), scheme, seed)
 
 
 # --------------------------------------------------------------------- #

@@ -78,13 +78,14 @@ def sweep(grid: Sequence[ExperimentSpec], *,
     both vectorized over the stacked lanes (lanes that differ in compute
     physics fall into separate *compute groups* inside
     ``repro.sim.batched_compute`` but still share the one comm-scan
-    compile); ``engine="hybrid"`` stacks the same fleets with the
-    per-seed host compute loop; ``engine="oracle"`` runs each cell
-    through the event-driven reference loop instead (the differential
-    baseline)."""
+    compile); ``engine="device"`` additionally keeps the stop state
+    machine in the scan carry (``repro.sim.device_epoch``);
+    ``engine="hybrid"`` stacks the same fleets with the per-seed host
+    compute loop; ``engine="oracle"`` runs each cell through the
+    event-driven reference loop instead (the differential baseline)."""
     grid = list(grid)
     groups = plan_groups(grid)      # also validates cell types, any engine
-    if engine not in ("batched", "hybrid"):
+    if engine not in ("batched", "device", "hybrid"):
         return [run_experiment(exp, engine=engine) for exp in grid]
     rows: Dict[int, FleetSummary] = {}
     for idxs in groups:
@@ -93,7 +94,9 @@ def sweep(grid: Sequence[ExperimentSpec], *,
                     for c in cells for seed in c.seeds]
         fleet = BatchedFleet(clusters=clusters,
                              compute=("host" if engine == "hybrid"
-                                      else "batched"))
+                                      else "batched"),
+                             tail=("device" if engine == "device"
+                                   else "host"))
         per_epoch = fleet.run(max(c.n_epochs for c in cells))
         lane = 0
         for i, cell in zip(idxs, cells):

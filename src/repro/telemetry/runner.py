@@ -30,34 +30,17 @@ def record_fleet(scenario, scheme: str = "two-stage", *,
     compile delta; ``sinks`` (e.g. a
     :class:`~repro.telemetry.sinks.JsonlSink`) receive the flushed event
     stream before returning.  ``engine`` is any of
-    :data:`repro.sim.montecarlo.ENGINES` — the oracle path records the
+    :data:`repro.sim.fleet.ENGINES` — the oracle path records the
     identical series slot by slot (the parity contract).
+
+    Thin wrapper over the :class:`~repro.sim.fleet.Fleet` facade, kept
+    for its established ``(results, recorder)`` signature.
     """
-    from repro.sim.batched import BatchedFleet
-    from repro.sim.montecarlo import ENGINES
-    from repro.sim.scenarios import resolve_scenario
-    from repro.sim.spec import build_cluster
+    from repro.sim.fleet import Fleet, validate_engine
 
-    if engine not in ENGINES:
-        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
-    spec = resolve_scenario(scenario, warn_string=True)
-    rec = FleetRecorder(config or TelemetryConfig())
-    rec.set_meta(scenario=spec.name, scheme=scheme, engine=engine,
-                 n_seeds=len(seeds), n_epochs=int(n_epochs))
-
-    if engine == "oracle":
-        clusters = []
-        for lane, seed in enumerate(seeds):
-            c = build_cluster(spec, scheme, int(seed))
-            c.telemetry_lane = lane
-            c.telemetry = rec
-            clusters.append(c)
-        results = [[c.run_epoch(e) for c in clusters]
-                   for e in range(n_epochs)]
-    else:
-        fleet = BatchedFleet(spec, scheme, seeds, telemetry=rec,
-                             compute=("host" if engine == "hybrid"
-                                      else "batched"))
-        results = fleet.run(n_epochs)
-    rec.flush(*sinks)
-    return results, rec
+    validate_engine(engine)
+    run = Fleet(scenario).run(scheme, seeds, n_epochs=n_epochs,
+                              engine=engine,
+                              telemetry=config or TelemetryConfig(),
+                              sinks=sinks)
+    return run.results, run.recorder

@@ -265,6 +265,82 @@ def test_batched_stage2_fields_bitwise(scenario):
             assert (_rng_state(a[i]) == _rng_state(b[i])), ctx
 
 
+# --------------------------------------------------------------------- #
+# the device-resident tail (PR 9): the in-carry stop state machine must
+# be indistinguishable from the host tracker — vs the oracle through the
+# exactness contract, and vs the host tail *strictly* (bitwise ledgers,
+# stop slots, decode outcomes, RNG stream position, predictor state)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("scenario", available_scenarios())
+def test_device_tail_differential_matrix(scenario, scheme):
+    spec = scenario_spec(scenario)
+    fleet = BatchedFleet(spec, scheme, SEEDS, compute="batched",
+                         tail="device")
+    device = fleet.run(N_EPOCHS)
+    for i, seed in enumerate(SEEDS):
+        cluster = build_cluster(spec, scheme, seed)
+        for e in range(N_EPOCHS):
+            _assert_epoch_exact(
+                cluster.run_epoch(e), device[e][i],
+                f"{scenario}/{scheme} seed={seed} epoch={e} [device]")
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("scenario", available_scenarios())
+def test_device_tail_is_bitwise_the_host_tail(scenario, scheme):
+    """Strict form of the contract: every CommStats field — including the
+    f32 byte ledgers the oracle comparison only checks to tolerance — is
+    bit-for-bit the host tail's, and both engines leave every lane's RNG
+    stream and predictor EWMA in the same state."""
+    spec = scenario_spec(scenario)
+    a = BatchedFleet(spec, scheme, SEEDS, tail="host")
+    b = BatchedFleet(spec, scheme, SEEDS, tail="device")
+    ra, rb = a.run(N_EPOCHS), b.run(N_EPOCHS)
+    for e in range(N_EPOCHS):
+        for i, seed in enumerate(SEEDS):
+            x, y = ra[e][i], rb[e][i]
+            ctx = f"{scenario}/{scheme} seed={seed} epoch={e}"
+            assert y.time == x.time, ctx
+            assert y.decode_ok == x.decode_ok, ctx
+            assert y.comm.n_slots == x.comm.n_slots, ctx
+            assert y.comm.decode_time == x.comm.decode_time, ctx
+            assert y.comm.min_energy == x.comm.min_energy, ctx
+            assert y.comm.max_overdraft == x.comm.max_overdraft, ctx
+            assert y.comm.idle_slots == x.comm.idle_slots, ctx
+            np.testing.assert_array_equal(y.weights, x.weights, err_msg=ctx)
+            for field in ("arrived", "bytes_offered", "bytes_admitted",
+                          "bytes_transmitted", "queue_residual",
+                          "pending_residual", "final_energy"):
+                np.testing.assert_array_equal(
+                    getattr(y.comm, field), getattr(x.comm, field),
+                    err_msg=f"{ctx}: {field}")
+    for ca, cb in zip(a.clusters, b.clusters):
+        assert (ca.engine.rng.bit_generator.state
+                == cb.engine.rng.bit_generator.state)
+        if scheme == "two-stage":
+            _assert_predictors_equal(ca.runtime.predictor,
+                                     cb.runtime.predictor)
+
+
+def test_device_tail_leaves_oracle_continuable_state():
+    """After device-tail epochs, each lane's cluster must continue through
+    the pure oracle loop exactly where the oracle would be (RNG parity:
+    stopped seeds stop drawing tape blocks)."""
+    spec = scenario_spec("bursty-stragglers")
+    fleet = BatchedFleet(spec, "two-stage", [7], tail="device")
+    oracle = build_cluster(spec, "two-stage", 7)
+    fleet.run_epoch(0)
+    oracle.run_epoch(0)
+    a = oracle.run_epoch(1)
+    b = fleet.clusters[0].run_epoch(1)                 # oracle loop
+    assert a.time == b.time
+    assert a.comm.n_slots == b.comm.n_slots
+    np.testing.assert_array_equal(a.weights, b.weights)
+    _assert_predictors_equal(oracle.runtime.predictor,
+                             fleet.clusters[0].runtime.predictor)
+
+
 def test_decode_requirements_batched_matches_scalar():
     spec = scenario_spec("bursty-stragglers")
     rts = [build_cluster(spec, "two-stage", s).runtime for s in SEEDS]

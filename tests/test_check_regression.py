@@ -23,6 +23,11 @@ FLEET = {
         "enabled": {"seconds": 0.102, "seed_epochs_per_sec": 627.5},
         "throughput_ratio": 0.98,
     },
+    "megafleet": {
+        "1000": {"scenario": "homogeneous", "scheme": "two-stage",
+                 "engine": "device", "n_seeds": 1000, "n_epochs": 1,
+                 "seconds": 2.0, "seeds_per_sec": 500.0},
+    },
 }
 GRID = {
     "grouped": {"seconds": 1.0, "cells_per_sec": 40.0},
@@ -42,7 +47,8 @@ def test_metric_extraction():
     fm = fleet_metrics(FLEET)
     assert fm["fleet.homogeneous.batched.seed_epochs_per_sec"] == 600.0
     assert fm["fleet.homogeneous.speedup"] == 7.5
-    assert len(fm) == 2                    # oracle/hybrid rates not gated
+    assert fm["fleet.megafleet.1000.seeds_per_sec"] == 500.0
+    assert len(fm) == 3                    # oracle/hybrid rates not gated
     gm = grid_metrics(GRID)
     assert gm == {"grid.grouped.cells_per_sec": 40.0,
                   "grid.per_cell.cells_per_sec": 20.0,
@@ -171,6 +177,45 @@ def test_grid_speedup_gate_fails_on_missing_metric(bench_dir, capsys):
     assert "no 'speedup' field" in capsys.readouterr().out
 
 
+def test_megafleet_floor_trips_on_slowdown(bench_dir, capsys):
+    """A 1000-seed device-engine slowdown below baseline x 0.7 must trip
+    the dedicated megafleet floor (and its message must name it)."""
+    slow = copy.deepcopy(FLEET)
+    slow["megafleet"]["1000"]["seeds_per_sec"] = 300.0   # 0.6x baseline
+    (bench_dir / "BENCH_fleet.json").write_text(json.dumps(slow))
+    assert main(_argv(bench_dir)) == 1
+    assert "FAIL megafleet floor" in capsys.readouterr().out
+    # relaxing both the dedicated floor and the generic relative gate
+    # (which covers the same metric) clears the same artifact
+    assert main(_argv(bench_dir, ["--megafleet-floor", "0.5",
+                                  "--tolerance", "0.5"])) == 0
+
+
+def test_megafleet_floor_fails_on_missing_row(bench_dir, capsys):
+    """Dropping the megafleet section must not turn the floor into a
+    silent no-op (e.g. fleet_scale run with --megafleet-seeds '')."""
+    bare = copy.deepcopy(FLEET)
+    del bare["megafleet"]
+    (bench_dir / "BENCH_fleet.json").write_text(json.dumps(bare))
+    assert main(_argv(bench_dir)) == 1
+    assert "no 1000-seed megafleet row" in capsys.readouterr().out
+
+
+def test_megafleet_floor_fails_without_committed_baseline(tmp_path,
+                                                          capsys):
+    """A megafleet row with no committed baseline metric must fail the
+    floor (run ungated) rather than pass as merely 'new'."""
+    bare = copy.deepcopy(FLEET)
+    del bare["megafleet"]                       # baselines built without it
+    (tmp_path / "BENCH_fleet.json").write_text(json.dumps(bare))
+    (tmp_path / "BENCH_grid.json").write_text(json.dumps(GRID))
+    (tmp_path / "BENCH_train.json").write_text(json.dumps(TRAIN))
+    assert main(_argv(tmp_path, ["--update"])) == 0
+    (tmp_path / "BENCH_fleet.json").write_text(json.dumps(FLEET))
+    assert main(_argv(tmp_path)) == 1
+    assert "no committed baseline metric" in capsys.readouterr().out
+
+
 def test_train_floor_gate_trips_below_absolute_floor(bench_dir, capsys):
     """Two-stage losing the wall-clock race must fail on the absolute
     floor even when the committed baseline itself recorded the loss."""
@@ -226,6 +271,11 @@ def test_committed_baselines_cover_smoke_metrics():
     for name, _, _, _ in SMOKE:
         assert f"fleet.{name}.batched.seed_epochs_per_sec" in fleet
         assert f"fleet.{name}.speedup" in fleet
+    # the 1k megafleet row the dedicated floor gates must have a baseline
+    assert cr.MEGAFLEET_KEY in fleet
+    from benchmarks.fleet_scale import MEGAFLEET_FULL, MEGAFLEET_SMOKE
+    assert set(MEGAFLEET_SMOKE) <= set(MEGAFLEET_FULL)
+    assert 1000 in MEGAFLEET_SMOKE        # the size MEGAFLEET_KEY names
     with open(f"{cr.BASELINE_DIR}/BENCH_grid.json") as f:
         grid = json.load(f)["metrics"]
     assert "grid.grouped.cells_per_sec" in grid

@@ -20,8 +20,8 @@ SEEDS = [0, 7, 19]
 N_EPOCHS = 2
 
 
-def _summary(spec, scheme, chunk):
-    fleet = BatchedFleet(spec, scheme, SEEDS, chunk=chunk)
+def _summary(spec, scheme, chunk, tail="host"):
+    fleet = BatchedFleet(spec, scheme, SEEDS, chunk=chunk, tail=tail)
     per_epoch = fleet.run(N_EPOCHS)                       # [epoch][seed]
     results = [per_epoch[e][i] for i in range(len(SEEDS))
                for e in range(N_EPOCHS)]
@@ -157,3 +157,51 @@ def test_rng_stream_position_is_chunk_invariant():
         states.append([c.engine.rng.bit_generator.state
                        for c in fleet.clusters])
     assert states[0] == states[1]
+
+
+# --------------------------------------------------------------------- #
+# the device-resident tail obeys the same invariance contract (PR 9):
+# the in-carry stop machine sees chunk boundaries only as scan re-entry
+# points, and the per-chunk (S,) stop-mask fetch keeps tape draws
+# block-aligned exactly like the host tracker's
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("scheme", ["two-stage", "cyclic"])
+@pytest.mark.parametrize("scenario", ["homogeneous", "saturated-uplink"])
+def test_device_tail_chunk_invariance(scenario, scheme):
+    spec = scenario_spec(scenario)
+    rows = [_summary(spec, scheme, chunk, tail="device")
+            for chunk in (32, 64, TAPE_BLOCK, None)]
+    assert rows[0] == rows[1] == rows[2] == rows[3]
+    # and every chunk's rows equal the host tail's bitwise
+    assert rows[0] == _summary(spec, scheme, None, tail="host")
+
+
+def test_device_tail_rng_stream_position_is_chunk_invariant():
+    """Device-tail RNG positions must match across chunks *and* match the
+    host tail's — stopped seeds stop drawing tape blocks identically."""
+    spec = scenario_spec("saturated-uplink")
+    states = []
+    for tail, chunk in (("device", 32), ("device", TAPE_BLOCK),
+                        ("host", TAPE_BLOCK)):
+        fleet = BatchedFleet(spec, "two-stage", SEEDS, chunk=chunk,
+                             tail=tail)
+        fleet.run_epoch(0)
+        states.append([c.engine.rng.bit_generator.state
+                       for c in fleet.clusters])
+    assert states[0] == states[1] == states[2]
+
+
+def test_heterogeneous_fleet_device_tail_chunk_invariance():
+    """Stacked per-lane physics (payload, saturation, energy harvesting)
+    through the in-carry tracker: bit-identical summaries per chunk and
+    vs the host tail."""
+    def row(chunk, tail):
+        fleet = BatchedFleet(clusters=_hetero_clusters(), chunk=chunk,
+                             tail=tail)
+        per_epoch = fleet.run(N_EPOCHS)
+        results = [per_epoch[e][i] for i in range(fleet.n_seeds)
+                   for e in range(N_EPOCHS)]
+        return summarize_fleet("hetero", "two-stage", fleet.n_seeds,
+                               N_EPOCHS, results)
+    rows = [row(chunk, "device") for chunk in (32, TAPE_BLOCK)]
+    assert rows[0] == rows[1] == row(None, "host")

@@ -1,0 +1,182 @@
+"""The ``Fleet`` facade (PR 9): one front door, thin legacy wrappers.
+
+Pins the facade collapse's contract:
+
+  * ``run_fleet`` / ``record_fleet`` / direct ``BatchedFleet`` use are
+    bit-identical to the equivalent ``Fleet(...).run(...)`` call — the
+    wrappers delegate, they do not reimplement;
+  * every entry point validates ``engine=`` against the one exported
+    :data:`repro.sim.ENGINES` tuple, and the error message lists every
+    member (the stays-in-sync test);
+  * telemetry ownership: a caller-supplied ``FleetRecorder`` is threaded
+    as-is, while ``TelemetryConfig`` / ``True`` make the facade own the
+    recorder (meta stamped, events flushed to ``sinks``);
+  * engine-specific knobs (``mesh=``, ``chunk=``) are rejected on
+    engines that cannot honour them.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import (BatchedFleet, ENGINES, Fleet, FleetRun,
+                       run_fleet, scenario_spec, validate_engine)
+from repro.sim.fleet import _ENGINE_KNOBS
+from repro.sim.spec import fleet_seeds
+from repro.telemetry import record_fleet
+from repro.telemetry.recorder import FleetRecorder, TelemetryConfig
+from repro.telemetry.sinks import MemorySink
+
+SPEC = scenario_spec("heterogeneous-rates")
+
+
+# --------------------------------------------------------------------- #
+# ENGINES is the single source of truth
+# --------------------------------------------------------------------- #
+def test_engines_constant_is_the_single_export():
+    import repro.sim.fleet as fleet_mod
+    from repro.sim import ENGINES as reexport
+    assert reexport is fleet_mod.ENGINES
+    assert ENGINES == ("batched", "device", "hybrid", "oracle")
+    # every batched-style engine has its knob row; oracle is the one
+    # engine dispatched outside BatchedFleet
+    assert set(_ENGINE_KNOBS) == set(ENGINES) - {"oracle"}
+
+
+@pytest.mark.parametrize("call", [
+    lambda: validate_engine("turbo"),
+    lambda: Fleet(SPEC).run("two-stage", [0], engine="turbo"),
+    lambda: run_fleet(SPEC, n_seeds=1, n_epochs=1, engine="turbo"),
+    lambda: record_fleet(SPEC, seeds=[0], n_epochs=1, engine="turbo"),
+])
+def test_engine_error_lists_every_valid_engine(call):
+    """The error message is built from ENGINES itself, so it can never
+    drift from the actual set — every member must appear in it."""
+    with pytest.raises(ValueError) as ei:
+        call()
+    msg = str(ei.value)
+    assert "turbo" in msg
+    for name in ENGINES:
+        assert name in msg, f"{name!r} missing from: {msg}"
+
+
+# --------------------------------------------------------------------- #
+# wrapper bit-identity
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine", ENGINES)
+def test_run_fleet_is_bit_identical_to_fleet_run(engine):
+    kw = dict(n_seeds=2, n_epochs=2, base_seed=3)
+    a = run_fleet(SPEC, "two-stage", engine=engine, **kw)
+    b = Fleet(SPEC).run("two-stage", fleet_seeds(2, 3), n_epochs=2,
+                        engine=engine).summary()
+    assert a == b                     # dataclass == ⟹ bitwise-equal floats
+
+
+def test_run_fleet_applies_overrides_through_the_facade():
+    from repro.sim import CommParams
+    a = run_fleet(SPEC, "two-stage", n_seeds=2, n_epochs=1,
+                  grad_bytes=2.5)
+    b = Fleet(SPEC, grad_bytes=2.5).run(
+        "two-stage", fleet_seeds(2, 0), n_epochs=1).summary()
+    assert a == b
+    with pytest.raises(ValueError, match="unknown scenario override"):
+        run_fleet(SPEC, "two-stage", n_seeds=1, n_epochs=1,
+                  straggler_probability=0.5)
+
+
+def test_batched_fleet_direct_is_bit_identical_to_fleet_run():
+    seeds = (0, 7)
+    fleet = BatchedFleet(SPEC, "two-stage", seeds)
+    a = fleet.run(2)
+    b = Fleet(SPEC).run("two-stage", seeds, n_epochs=2).results
+    for e in range(2):
+        for i in range(len(seeds)):
+            assert a[e][i].time == b[e][i].time
+            assert a[e][i].comm.n_slots == b[e][i].comm.n_slots
+            np.testing.assert_array_equal(a[e][i].weights, b[e][i].weights)
+            np.testing.assert_array_equal(a[e][i].comm.bytes_transmitted,
+                                          b[e][i].comm.bytes_transmitted)
+
+
+def test_record_fleet_is_the_facades_owned_recorder_path():
+    sink = MemorySink()
+    results, rec = record_fleet(SPEC, "two-stage", seeds=(0, 1),
+                                n_epochs=2, sinks=(sink,))
+    run = Fleet(SPEC).run("two-stage", (0, 1), n_epochs=2)
+    assert isinstance(rec, FleetRecorder)
+    assert rec.meta["scenario"] == SPEC.name
+    assert rec.meta["scheme"] == "two-stage"
+    assert rec.meta["engine"] == "batched"
+    assert rec.meta["n_seeds"] == 2 and rec.meta["n_epochs"] == 2
+    assert sink.events                      # flushed before returning
+    for e in range(2):
+        for i in range(2):
+            assert results[e][i].time == run.results[e][i].time
+            np.testing.assert_array_equal(results[e][i].comm.arrived,
+                                          run.results[e][i].comm.arrived)
+
+
+# --------------------------------------------------------------------- #
+# telemetry ownership semantics
+# --------------------------------------------------------------------- #
+def test_caller_supplied_recorder_is_threaded_not_owned():
+    rec = FleetRecorder(TelemetryConfig())
+    run = Fleet(SPEC).run("two-stage", (0,), n_epochs=1, telemetry=rec)
+    assert run.recorder is rec
+    assert "scenario" not in rec.meta       # caller owns meta/flush
+
+
+def test_facade_owns_recorder_for_config_or_true():
+    for telemetry in (TelemetryConfig(), True):
+        run = Fleet(SPEC).run("two-stage", (0,), n_epochs=1,
+                              telemetry=telemetry)
+        assert isinstance(run.recorder, FleetRecorder)
+        assert run.recorder.meta["scenario"] == SPEC.name
+        assert run.recorder.meta["engine"] == "batched"
+    with pytest.raises(TypeError, match="telemetry"):
+        Fleet(SPEC).run("two-stage", (0,), telemetry="yes")
+
+
+def test_telemetry_none_matches_telemetry_on_bitwise():
+    a = Fleet(SPEC).run("two-stage", (0, 1), n_epochs=2)
+    b = Fleet(SPEC).run("two-stage", (0, 1), n_epochs=2, telemetry=True)
+    for e in range(2):
+        for i in range(2):
+            assert a.results[e][i].time == b.results[e][i].time
+            np.testing.assert_array_equal(a.results[e][i].weights,
+                                          b.results[e][i].weights)
+
+
+# --------------------------------------------------------------------- #
+# knob validation + FleetRun shape
+# --------------------------------------------------------------------- #
+def test_engine_specific_knobs_are_rejected_elsewhere():
+    import jax
+    mesh = jax.make_mesh((1,), ("seeds",))
+    with pytest.raises(ValueError, match="mesh= requires engine='device'"):
+        Fleet(SPEC).run("two-stage", (0,), engine="batched", mesh=mesh)
+    with pytest.raises(ValueError, match="chunk"):
+        Fleet(SPEC).run("two-stage", (0,), engine="oracle", chunk=64)
+
+
+def test_fleet_rejects_empty_seed_lists_and_zero_epochs():
+    with pytest.raises(ValueError, match="n_epochs"):
+        Fleet(SPEC).run("two-stage", ())
+    with pytest.raises(ValueError, match="n_epochs"):
+        Fleet(SPEC).run("two-stage", (0,), n_epochs=0)
+    with pytest.raises(ValueError, match="n_seeds"):
+        run_fleet(SPEC, "two-stage", n_seeds=0, n_epochs=1)
+
+
+def test_fleet_run_seed_major_is_the_oracle_loop_order():
+    run = Fleet(SPEC).run("two-stage", (0, 7), n_epochs=2)
+    flat = run.seed_major()
+    assert len(flat) == 4
+    assert flat[0] is run.results[0][0] and flat[1] is run.results[1][0]
+    assert flat[2] is run.results[0][1] and flat[3] is run.results[1][1]
+    assert isinstance(run, FleetRun)
+    assert run.scenario == SPEC.name and run.seeds == (0, 7)
+
+
+def test_oracle_engine_matches_batched_through_the_facade():
+    a = Fleet(SPEC).run("two-stage", (0, 7), n_epochs=2, engine="oracle")
+    b = Fleet(SPEC).run("two-stage", (0, 7), n_epochs=2, engine="batched")
+    assert a.summary() == b.summary()

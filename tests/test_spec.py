@@ -7,8 +7,10 @@ Covers the spec layer's contracts (DESIGN.md §3.6):
   * JSON round-trip — ``to_json``/``from_json`` reproduce every registry
     scenario exactly, pinned by golden files so fleets are reproducible
     from an artifact rather than a code version;
-  * deprecated wrappers — ``make_cluster``/``get_scenario``/string-keyed
-    ``run_fleet`` warn but stay bit-identical to the spec path;
+  * shim removal — the PR-3 string-keyed wrappers (``make_cluster``,
+    ``get_scenario``, string scenarios through ``run_fleet``) are gone
+    (PR 9): names absent from the API, strings raise ``TypeError``
+    pointing at ``scenario_spec``;
   * specs are static pytrees (zero leaves, hashable, usable as dict keys).
 """
 import dataclasses
@@ -22,8 +24,8 @@ from repro.sim import (BatchedFleet, CommParams, ExperimentSpec,
                        GilbertElliottChannel, ScenarioSpec, StaticChannel,
                        StaticChannelSpec, TraceChannel, as_channel_spec,
                        available_scenarios, build_cluster, compare_schemes,
-                       get_scenario, make_cluster, run_experiment,
-                       run_fleet, scenario_spec, split_comm_params)
+                       run_experiment, run_fleet, scenario_spec,
+                       split_comm_params)
 from repro.sim.spec import CommSpec, ComputeSpec, EnergySpec
 
 GOLDEN_DIR = Path(__file__).parent / "golden" / "scenario_specs"
@@ -41,11 +43,10 @@ def test_unknown_override_raises_with_valid_field_list():
         spec.with_overrides(payload=2.0)
 
 
-def test_make_cluster_rejects_unknown_override():
-    with pytest.deprecated_call():
-        with pytest.raises(ValueError, match="unknown scenario override"):
-            make_cluster("homogeneous", scheme="two-stage", seed=0,
-                         straggler_probability=0.5)
+def test_fleet_rejects_unknown_override():
+    from repro.sim import Fleet
+    with pytest.raises(ValueError, match="unknown scenario override"):
+        Fleet(scenario_spec("homogeneous"), straggler_probability=0.5)
 
 
 def test_overrides_route_to_owning_subspec():
@@ -228,37 +229,24 @@ def test_registry_is_typed_data():
 
 
 # --------------------------------------------------------------------- #
-# deprecated wrappers stay bit-identical to the spec path
+# the PR-3 string shims are gone (PR 9)
 # --------------------------------------------------------------------- #
-def test_make_cluster_wrapper_is_bit_identical_to_spec_path():
-    spec = scenario_spec("fading-uplink").with_overrides(
-        comm=CommParams(grad_bytes=0.1))
-    a = build_cluster(spec, "two-stage", 11).run_epoch(0)
-    with pytest.deprecated_call():
-        cluster = make_cluster("fading-uplink", scheme="two-stage",
-                               seed=11, comm=CommParams(grad_bytes=0.1))
-    b = cluster.run_epoch(0)
-    assert a.time == b.time
-    assert a.comm.n_slots == b.comm.n_slots
-    assert a.decode_ok == b.decode_ok
-    np.testing.assert_array_equal(a.comm.arrived, b.comm.arrived)
-    np.testing.assert_array_equal(a.comm.bytes_transmitted,
-                                  b.comm.bytes_transmitted)
-    np.testing.assert_array_equal(a.weights, b.weights)
+def test_string_shims_are_removed_from_the_api():
+    import repro.sim as sim
+    for name in ("get_scenario", "make_cluster"):
+        assert not hasattr(sim, name)
+        assert not hasattr(sim.scenarios, name)
+        assert name not in sim.__all__
 
 
-def test_string_keyed_run_fleet_wrapper_is_bit_identical():
-    kw = dict(n_seeds=2, n_epochs=2, base_seed=3)
-    a = run_fleet(scenario_spec("homogeneous"), "two-stage", **kw)
-    with pytest.deprecated_call():
-        b = run_fleet("homogeneous", "two-stage", **kw)
-    assert a == b                     # dataclass == ⟹ bitwise-equal floats
-
-
-def test_get_scenario_is_deprecated_alias():
-    with pytest.deprecated_call():
-        spec = get_scenario("homogeneous")
-    assert spec == scenario_spec("homogeneous")
+def test_string_scenarios_raise_pointing_at_scenario_spec():
+    with pytest.raises(TypeError, match="scenario_spec"):
+        run_fleet("homogeneous", "two-stage", n_seeds=1, n_epochs=1)
+    with pytest.raises(TypeError, match="scenario_spec"):
+        BatchedFleet("homogeneous", "two-stage", [0])
+    from repro.sim import Fleet
+    with pytest.raises(TypeError, match="scenario_spec"):
+        Fleet("homogeneous")
 
 
 def test_batched_fleet_accepts_spec_without_warning():
