@@ -52,6 +52,19 @@ two-stage reaches the target loss in less simulated wall-clock must hold,
 not merely track a baseline).  Missing fields fail.  ``--train-floor`` /
 env ``TRAIN_SPEEDUP_FLOOR`` override it.
 
+The Lyapunov frontier artifact (``BENCH_lyapunov_frontier.json`` from
+``benchmarks.lyapunov_frontier``) is gated both ways too: each
+scenario's ``max_throughput`` and ``max_jain`` relative to the committed
+baseline, plus two absolute floors — every scenario's best Jain index
+must clear ``--frontier-floor`` (env ``FRONTIER_JAIN_FLOOR``, default
+0.4: even the paper's deliberately unfair hot-channel V-sweep stays
+above it), and every grid point's mean total backlog must respect the
+O(V)-backlog ceiling ``FRONTIER_QTOT_BASE + FRONTIER_QTOT_PER_V · V``
+(defaults 50 + 25·V, ≈3× the measured steady-state ``Q/V``) — an
+unstable admission policy grows without bound and punches through it.
+A missing ``scenarios`` section fails, so the scheduler's stability
+bounds cannot silently drop out of CI.
+
     PYTHONPATH=src python -m benchmarks.check_regression            # gate
     PYTHONPATH=src python -m benchmarks.check_regression --update   # refresh
 
@@ -82,6 +95,12 @@ MEGAFLEET_FLOOR = 0.7
 MEGAFLEET_KEY = "fleet.megafleet.1000.seeds_per_sec"
 #: The train-artifact speedup fields the floor (and baselines) gate.
 TRAIN_SPEEDUP_KEYS = ("speedup_vs_uncoded", "speedup_vs_cyclic")
+#: Absolute floor on every frontier scenario's best Jain index.
+FRONTIER_JAIN_FLOOR = 0.4
+#: O(V)-backlog ceiling on every frontier point's mean total backlog:
+#: ``mean_qtot <= FRONTIER_QTOT_BASE + FRONTIER_QTOT_PER_V * V``.
+FRONTIER_QTOT_BASE = 50.0
+FRONTIER_QTOT_PER_V = 25.0
 BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 
 
@@ -125,6 +144,20 @@ def train_metrics(data: dict) -> dict:
     for key in TRAIN_SPEEDUP_KEYS:
         if key in data:
             out[f"train.{key}"] = float(data[key])
+    return out
+
+
+def frontier_metrics(data: dict) -> dict:
+    """Flat ``{metric: value}`` view of a BENCH_lyapunov_frontier.json:
+    each scenario's frontier extremes (higher is better on both axes, so
+    the relative gate applies directly)."""
+    out = {}
+    for name, row in data.get("scenarios", {}).items():
+        if isinstance(row, dict) and "max_throughput" in row:
+            out[f"frontier.{name}.max_throughput"] = \
+                float(row["max_throughput"])
+        if isinstance(row, dict) and "max_jain" in row:
+            out[f"frontier.{name}.max_jain"] = float(row["max_jain"])
     return out
 
 
@@ -270,6 +303,46 @@ def check_train_floor(data: dict, floor: float) -> bool:
     return ok
 
 
+def check_frontier_floor(data: dict, jain_floor: float, qtot_base: float,
+                         qtot_per_v: float) -> bool:
+    """Gate the frontier artifact's absolute stability/fairness bounds:
+    every scenario's best Jain index must clear ``jain_floor`` and every
+    grid point's mean total backlog must stay under the O(V) ceiling
+    ``qtot_base + qtot_per_v * V`` (a Lyapunov scheduler's steady-state
+    backlog is O(V); unbounded queue growth punches through whatever the
+    ceiling is).  A missing/empty ``scenarios`` section fails so the
+    scheduler's stability bounds cannot silently drop out of CI."""
+    scenarios = data.get("scenarios")
+    if not isinstance(scenarios, dict) or not scenarios:
+        print("FAIL frontier floor: no 'scenarios' section in the "
+              "frontier artifact; run benchmarks.lyapunov_frontier from "
+              "this tree")
+        return False
+    ok = True
+    for name, row in sorted(scenarios.items()):
+        row_ok = True
+        jain = float(row.get("max_jain", -1.0))
+        if jain < jain_floor:
+            print(f"FAIL frontier fairness on {name}: best Jain "
+                  f"{jain:.3f} < floor {jain_floor:.2f}")
+            row_ok = False
+        worst = 0.0
+        for p in row.get("points", []):
+            ceiling = qtot_base + qtot_per_v * float(p["V"])
+            worst = max(worst, float(p["mean_qtot"]) / ceiling)
+            if float(p["mean_qtot"]) > ceiling:
+                print(f"FAIL frontier stability on {name}: mean backlog "
+                      f"{float(p['mean_qtot']):.1f} > O(V) ceiling "
+                      f"{ceiling:.1f} at V={float(p['V']):g}")
+                row_ok = False
+        if row_ok:
+            print(f"frontier floor on {name}: best Jain {jain:.3f} >= "
+                  f"{jain_floor:.2f}, backlog <= {100 * worst:.0f}% of "
+                  f"O(V) ceiling")
+        ok &= row_ok
+    return ok
+
+
 def update_baseline(bench_path: str, baseline_path: str, extract,
                     note: str) -> None:
     metrics = extract(_load(bench_path))
@@ -289,6 +362,8 @@ def main(argv=None) -> int:
                     help="grid-sweep benchmark artifact")
     ap.add_argument("--train", default="BENCH_train.json",
                     help="coded-training benchmark artifact")
+    ap.add_argument("--frontier", default="BENCH_lyapunov_frontier.json",
+                    help="Lyapunov frontier benchmark artifact")
     ap.add_argument("--baselines", default=BASELINE_DIR,
                     help="directory of committed baseline JSONs")
     ap.add_argument("--tolerance", type=float,
@@ -323,6 +398,22 @@ def main(argv=None) -> int:
                          "speedup vs uncoded and cyclic (1.0 = two-stage "
                          "must not lose the paper's wall-clock claim; env "
                          "TRAIN_SPEEDUP_FLOOR overrides)")
+    ap.add_argument("--frontier-floor", type=float,
+                    default=float(os.environ.get(
+                        "FRONTIER_JAIN_FLOOR", FRONTIER_JAIN_FLOOR)),
+                    help="absolute floor on every frontier scenario's "
+                         "best Jain index (env FRONTIER_JAIN_FLOOR "
+                         "overrides)")
+    ap.add_argument("--frontier-qtot-base", type=float,
+                    default=float(os.environ.get(
+                        "FRONTIER_QTOT_BASE", FRONTIER_QTOT_BASE)),
+                    help="constant term of the frontier O(V) backlog "
+                         "ceiling (env FRONTIER_QTOT_BASE overrides)")
+    ap.add_argument("--frontier-qtot-per-v", type=float,
+                    default=float(os.environ.get(
+                        "FRONTIER_QTOT_PER_V", FRONTIER_QTOT_PER_V)),
+                    help="per-V term of the frontier O(V) backlog "
+                         "ceiling (env FRONTIER_QTOT_PER_V overrides)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baselines from the current artifacts")
     ap.add_argument("--note", default="refreshed via --update",
@@ -334,7 +425,10 @@ def main(argv=None) -> int:
              (args.grid, os.path.join(args.baselines, "BENCH_grid.json"),
               grid_metrics),
              (args.train, os.path.join(args.baselines, "BENCH_train.json"),
-              train_metrics)]
+              train_metrics),
+             (args.frontier,
+              os.path.join(args.baselines, "BENCH_lyapunov_frontier.json"),
+              frontier_metrics)]
     # every expected artifact must exist — a benchmark job that silently
     # stopped writing its JSON must not turn the gate into a partial no-op
     absent = [b for b, _, _ in pairs if not os.path.exists(b)]
@@ -342,7 +436,8 @@ def main(argv=None) -> int:
         for b in absent:
             print(f"FAIL missing benchmark artifact {b}; run "
                   f"benchmarks.fleet_scale / benchmarks.grid_sweep / "
-                  f"benchmarks.train_e2e first")
+                  f"benchmarks.train_e2e / benchmarks.lyapunov_frontier "
+                  f"first")
         return 2
 
     if args.update:
@@ -365,6 +460,9 @@ def main(argv=None) -> int:
                                 args.megafleet_floor)
     ok &= check_grid_speedup(_load(args.grid), args.grid_speedup_floor)
     ok &= check_train_floor(_load(args.train), args.train_floor)
+    ok &= check_frontier_floor(_load(args.frontier), args.frontier_floor,
+                               args.frontier_qtot_base,
+                               args.frontier_qtot_per_v)
     print("benchmark regression gate: " + ("PASS" if ok else "FAIL"))
     return 0 if ok else 1
 

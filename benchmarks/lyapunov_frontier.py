@@ -1,0 +1,106 @@
+"""Lyapunov V-frontier: steady-state throughput–fairness per scenario.
+
+Soaks the P4–P7 scheduler (``repro.sim.soak``) across the registry
+scenarios × the default V grid — plus the paper's own V-sweep scenario
+ingested from ``benchmarks.paper_lyapunov`` — and writes the per-scenario
+throughput–fairness frontier (``repro.sim.policy.frontier_dict``) as
+``BENCH_lyapunov_frontier.json``, the artifact
+``benchmarks.check_regression`` gates with relative bounds on
+``max_throughput`` / ``max_jain`` plus absolute queue-stability and
+fairness floors.
+
+Scenario choice: the soak is pure admission/transmission physics —
+``grad_bytes`` and the compute phase never enter — so registry scenarios
+that differ only there (``bursty-stragglers`` vs ``homogeneous``,
+``saturated-uplink`` vs ``heterogeneous-rates``) would soak identically;
+the list below keeps one representative per distinct comm physics.
+
+The soak is deterministic given the seed (counter-based in-scan
+randomness, sequential f64 moment carry), so smoke and full runs differ
+only in horizon, not in machine noise.
+
+    PYTHONPATH=src python -m benchmarks.lyapunov_frontier           # 1M slots
+    PYTHONPATH=src python -m benchmarks.lyapunov_frontier --smoke   # CI, 50k
+    PYTHONPATH=src python -m benchmarks.lyapunov_frontier --out F.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+#: One representative scenario per distinct soak (comm/energy/channel)
+#: physics in the registry.
+SCENARIOS = ["homogeneous", "heterogeneous-rates",
+             "energy-harvesting-constrained", "fading-uplink", "flash-crowd"]
+FULL_SLOTS = 1_000_000
+SMOKE_SLOTS = 50_000
+
+
+def run_frontier(n_slots: int, scenarios=tuple(SCENARIOS), *,
+                 seed: int = 0) -> dict:
+    from benchmarks.paper_lyapunov import paper_cells
+    from repro.sim import policy_grid, policy_search, scenario_spec
+    from repro.sim.policy import frontier_dict
+    cells = policy_grid([scenario_spec(s) for s in scenarios])
+    cells += paper_cells()
+    t0 = time.perf_counter()
+    points = policy_search(cells, n_slots, seed=seed)
+    dt = time.perf_counter() - t0
+    out = frontier_dict(points, n_slots=n_slots, warmup=n_slots // 5)
+    out["config"] = {
+        "seed": seed, "n_cells": len(cells), "seconds": dt,
+        "slots_per_sec": len(cells) * n_slots / dt,
+        "platform": platform.platform(),
+        "python": platform.python_version()}
+    return out
+
+
+def main(report=None) -> None:
+    """benchmarks.run hook: smoke-sized frontier through the CSV contract."""
+    res = run_frontier(SMOKE_SLOTS)
+    if report is not None:
+        for name, row in res["scenarios"].items():
+            best = max(row["points"], key=lambda p: p["throughput"])
+            report(f"lyapunov_frontier[{name}]",
+                   1e6 * res["config"]["seconds"] / len(res["scenarios"]),
+                   f"max_thru={row['max_throughput']:.3f},"
+                   f"max_jain={row['max_jain']:.3f},"
+                   f"best_V={best['V']:g},"
+                   f"pareto={sum(p['pareto'] for p in row['points'])}")
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"CI-sized horizon ({SMOKE_SLOTS} slots instead "
+                         f"of {FULL_SLOTS})")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="override the soak horizon")
+    ap.add_argument("--scenarios", nargs="*", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_lyapunov_frontier.json",
+                    help="JSON artifact path")
+    args = ap.parse_args()
+    n_slots = args.slots if args.slots is not None else (
+        SMOKE_SLOTS if args.smoke else FULL_SLOTS)
+    res = run_frontier(n_slots, scenarios=args.scenarios or tuple(SCENARIOS),
+                       seed=args.seed)
+    cfg = res["config"]
+    print(f"{cfg['n_cells']} cells x {n_slots} slots in "
+          f"{cfg['seconds']:.1f}s ({cfg['slots_per_sec']:.2e} lane-slots/s)")
+    for name, row in res["scenarios"].items():
+        pareto_V = ["%g" % p["V"] for p in row["points"] if p["pareto"]]
+        print(f"{name:32s} max_thru={row['max_throughput']:8.3f} "
+              f"max_jain={row['max_jain']:.3f} "
+              f"qtot<= {row['max_mean_qtot']:8.1f} "
+              f"pareto_V={pareto_V}")
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    _cli()

@@ -2,11 +2,13 @@
 from .queues import (QueueState, SystemParams, init_queues,
                      stack_system_params, step_queues)
 from .scheduler import (Decisions, Observation, batched_schedule_slot,
-                        jain_index, run_horizon, schedule_slot)
+                        batched_schedule_slot_theta, jain_index,
+                        run_horizon, schedule_slot)
 
 __all__ = [
     "QueueState", "SystemParams", "init_queues", "step_queues",
     "stack_system_params",
-    "Decisions", "Observation", "batched_schedule_slot", "jain_index",
+    "Decisions", "Observation", "batched_schedule_slot",
+    "batched_schedule_slot_theta", "jain_index",
     "run_horizon", "schedule_slot",
 ]

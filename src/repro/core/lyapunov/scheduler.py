@@ -33,8 +33,8 @@ import jax.numpy as jnp
 from .queues import QueueState, SystemParams, step_queues
 
 __all__ = ["Observation", "Decisions", "schedule_slot",
-           "batched_schedule_slot", "run_horizon", "jain_index",
-           "on_schedule_trace"]
+           "batched_schedule_slot", "batched_schedule_slot_theta",
+           "run_horizon", "jain_index", "on_schedule_trace"]
 
 _LN2 = 0.6931471805599453
 
@@ -164,6 +164,19 @@ batched_schedule_slot = jax.vmap(
              Observation(D=0, r=0, E_H=0, L=0, new_cycles=0)))
 
 
+#: ``batched_schedule_slot`` with the P6/P7 energy perturbation θ mapped
+#: as a fourth *positional* per-lane input of shape (S, M) — vmap cannot
+#: map keyword-only arguments, so the theta-sweeping callers (the soak
+#: harness's policy grid, ``repro.sim.soak``) use this wrapper instead of
+#: the default-θ ``batched_schedule_slot``.  Passing ``theta = 0.5 *
+#: E_cap`` rows reproduces the default variant exactly.
+batched_schedule_slot_theta = jax.vmap(
+    lambda state, params, obs, theta: schedule_slot(state, params, obs,
+                                                    theta=theta),
+    in_axes=(0, 0,
+             Observation(D=0, r=0, E_H=0, L=0, new_cycles=0), 0))
+
+
 def run_horizon(state: QueueState, params: SystemParams, obs_seq: Observation
                 ) -> tuple[QueueState, Decisions]:
     """Scan the scheduler over a (T_slots, …) observation sequence."""
@@ -173,8 +186,18 @@ def run_horizon(state: QueueState, params: SystemParams, obs_seq: Observation
     return jax.lax.scan(body, state, obs_seq)
 
 
-def jain_index(x: jax.Array) -> jax.Array:
-    """Jain fairness index in [1/M, 1]."""
-    num = jnp.sum(x) ** 2
-    den = x.shape[0] * jnp.sum(x * x)
-    return num / jnp.maximum(den, 1e-12)
+def jain_index(x) -> float:
+    """Jain fairness index of a non-negative share vector — a thin alias
+    of :func:`repro.telemetry.metrics.jain_index`, the one definition
+    (range ``(0, 1]``; the degenerate all-zero/empty allocation is 1.0 by
+    convention; negative shares raise).  Host-side reduction, not
+    jit-compatible — every caller reduces concrete per-worker totals.
+
+    The import is deferred: ``repro.telemetry`` subscribes its compile
+    counter to :func:`on_schedule_trace` at import time, so this module
+    must not import telemetry at module level.
+    """
+    import numpy as np
+
+    from repro.telemetry.metrics import jain_index as _jain
+    return _jain(np.asarray(x))

@@ -37,6 +37,10 @@ from .batched_compute import (batched_comm_jobs, batched_compute_phase,
 from .montecarlo import (FleetSummary, compare_schemes, run_experiment,
                          run_fleet, summarize_fleet)
 from .sweep import compat_key, plan_groups, sweep
+from .soak import (SoakLane, SoakResult, run_soak, soak_compat_key,
+                   soak_observations)
+from .policy import (PolicyCell, PolicyPoint, frontier_dict, policy_grid,
+                     policy_search)
 
 __all__ = [
     "Event", "EventEngine", "COMPUTE_DONE", "SLOT_TICK",
@@ -56,4 +60,8 @@ __all__ = [
     "FleetSummary", "run_fleet", "run_experiment", "compare_schemes",
     "summarize_fleet",
     "compat_key", "plan_groups", "sweep",
+    "SoakLane", "SoakResult", "run_soak", "soak_compat_key",
+    "soak_observations",
+    "PolicyCell", "PolicyPoint", "frontier_dict", "policy_grid",
+    "policy_search",
 ]

@@ -58,15 +58,24 @@ def compat_key(exp: ExperimentSpec) -> Tuple:
     return (exp.scheme, sc.M, sc.channel.kind)
 
 
-def plan_groups(grid: Sequence[ExperimentSpec]) -> List[List[int]]:
+def plan_groups(grid: Sequence, *, key=None) -> List[List[int]]:
     """Partition grid-cell indices into compile-sharing groups, ordered
-    by first appearance (cells keep their input order within a group)."""
+    by first appearance (cells keep their input order within a group).
+
+    With the default ``key=None`` the grid must be
+    :class:`ExperimentSpec` cells and :func:`compat_key` is the
+    signature; passing ``key=`` generalizes the same partition to other
+    cell types with their own structural signature — the Lyapunov soak
+    grids (``repro.sim.policy``) group their lanes through here with
+    ``key=soak_compat_key``.
+    """
+    keyfn = compat_key if key is None else key
     groups: Dict[Tuple, List[int]] = {}
     for i, exp in enumerate(grid):
-        if not isinstance(exp, ExperimentSpec):
+        if key is None and not isinstance(exp, ExperimentSpec):
             raise TypeError(f"grid[{i}] is {type(exp).__name__}, "
                             f"expected ExperimentSpec")
-        groups.setdefault(compat_key(exp), []).append(i)
+        groups.setdefault(keyfn(exp), []).append(i)
     return list(groups.values())
 
 

@@ -28,8 +28,9 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-__all__ = ["jain_index", "queue_stability_drift", "straggler_rate_ewma",
-           "fleet_fairness", "mean_queue_residual", "comm_stats_of"]
+__all__ = ["jain_index", "queue_stability_drift", "slope_from_moments",
+           "straggler_rate_ewma", "fleet_fairness", "mean_queue_residual",
+           "comm_stats_of"]
 
 
 def jain_index(x) -> float:
@@ -69,6 +70,33 @@ def queue_stability_drift(q_series: np.ndarray) -> float:
         return 0.0
     slots = np.arange(q.size, dtype=np.float64)
     return float(np.polyfit(slots, q, 1)[0])
+
+
+def slope_from_moments(n, s_t, s_tt, s_q, s_tq):
+    """Least-squares slope from running moments — the O(1)-memory form of
+    :func:`queue_stability_drift` the soak harness's scan carry uses.
+
+    Given ``n`` samples ``(t_i, q_i)`` summarized as ``s_t = Σt``,
+    ``s_tt = Σt²``, ``s_q = Σq`` and ``s_tq = Σt·q``, returns the same
+    ``polyfit(t, q, 1)[0]`` slope a materialized series would give —
+    ``(n·Σtq − Σt·Σq) / (n·Σt² − (Σt)²)`` — without ever holding the
+    series.  Degenerate windows (``n < 2`` or all-equal ``t``) have no
+    measurable drift and return 0.0.  Inputs may be numpy arrays (the
+    soak's per-lane (S,) moment rows); the reduction broadcasts.
+    """
+    n = np.asarray(n, np.float64)
+    s_t = np.asarray(s_t, np.float64)
+    s_tt = np.asarray(s_tt, np.float64)
+    s_q = np.asarray(s_q, np.float64)
+    s_tq = np.asarray(s_tq, np.float64)
+    den = n * s_tt - s_t * s_t
+    num = n * s_tq - s_t * s_q
+    with np.errstate(divide="ignore", invalid="ignore"):
+        slope = np.where((n >= 2.0) & (den > 0.0), num / np.where(
+            den > 0.0, den, 1.0), 0.0)
+    if slope.ndim == 0:
+        return float(slope)
+    return slope
 
 
 def straggler_rate_ewma(counts: Sequence[float], alpha: float = 0.3,

@@ -5,7 +5,8 @@ import json
 import pytest
 
 from benchmarks.check_regression import (compare, fleet_metrics,
-                                         grid_metrics, main, train_metrics)
+                                         frontier_metrics, grid_metrics,
+                                         main, train_metrics)
 
 FLEET = {
     "scenarios": {
@@ -43,6 +44,32 @@ TRAIN = {
 }
 
 
+def _frontier_point(V, throughput, jain, mean_qtot):
+    return {"V": V, "theta_frac": 0.5, "D_scale": 1.0,
+            "throughput": throughput, "jain": jain,
+            "mean_qtot": mean_qtot, "max_Q": 4.0 * mean_qtot,
+            "mean_H": 10.0 * V, "drift_slope": 1e-4, "drift_ratio": 0.02,
+            "utility": 1.0, "capacity": 0.9, "pareto": True}
+
+
+FRONTIER = {
+    "schema": "lyapunov-frontier/v1", "n_slots": 50_000, "warmup": 10_000,
+    "scenarios": {
+        "homogeneous": {
+            "points": [_frontier_point(5.0, 0.70, 0.98, 30.0),
+                       _frontier_point(80.0, 0.80, 1.00, 500.0)],
+            "max_throughput": 0.80, "max_jain": 1.00,
+            "max_drift_ratio": 0.02, "max_mean_qtot": 500.0,
+        },
+        "heterogeneous-rates": {
+            "points": [_frontier_point(5.0, 0.75, 0.70, 40.0)],
+            "max_throughput": 0.75, "max_jain": 0.70,
+            "max_drift_ratio": 0.02, "max_mean_qtot": 40.0,
+        },
+    },
+}
+
+
 def test_metric_extraction():
     fm = fleet_metrics(FLEET)
     assert fm["fleet.homogeneous.batched.seed_epochs_per_sec"] == 600.0
@@ -56,6 +83,11 @@ def test_metric_extraction():
     tm = train_metrics(TRAIN)
     assert tm == {"train.speedup_vs_uncoded": 1.34,
                   "train.speedup_vs_cyclic": 1.40}
+    fr = frontier_metrics(FRONTIER)
+    assert fr == {"frontier.homogeneous.max_throughput": 0.80,
+                  "frontier.homogeneous.max_jain": 1.00,
+                  "frontier.heterogeneous-rates.max_throughput": 0.75,
+                  "frontier.heterogeneous-rates.max_jain": 0.70}
 
 
 def test_compare_classifies_failures_missing_and_new():
@@ -76,12 +108,14 @@ def bench_dir(tmp_path):
     fleet = tmp_path / "BENCH_fleet.json"
     grid = tmp_path / "BENCH_grid.json"
     train = tmp_path / "BENCH_train.json"
+    frontier = tmp_path / "BENCH_lyapunov_frontier.json"
     fleet.write_text(json.dumps(FLEET))
     grid.write_text(json.dumps(GRID))
     train.write_text(json.dumps(TRAIN))
+    frontier.write_text(json.dumps(FRONTIER))
     baselines = tmp_path / "baselines"
     assert main(["--fleet", str(fleet), "--grid", str(grid),
-                 "--train", str(train),
+                 "--train", str(train), "--frontier", str(frontier),
                  "--baselines", str(baselines), "--update"]) == 0
     return tmp_path
 
@@ -90,6 +124,7 @@ def _argv(tmp_path, extra=()):
     return ["--fleet", str(tmp_path / "BENCH_fleet.json"),
             "--grid", str(tmp_path / "BENCH_grid.json"),
             "--train", str(tmp_path / "BENCH_train.json"),
+            "--frontier", str(tmp_path / "BENCH_lyapunov_frontier.json"),
             "--baselines", str(tmp_path / "baselines"), *extra]
 
 
@@ -210,6 +245,8 @@ def test_megafleet_floor_fails_without_committed_baseline(tmp_path,
     (tmp_path / "BENCH_fleet.json").write_text(json.dumps(bare))
     (tmp_path / "BENCH_grid.json").write_text(json.dumps(GRID))
     (tmp_path / "BENCH_train.json").write_text(json.dumps(TRAIN))
+    (tmp_path / "BENCH_lyapunov_frontier.json").write_text(
+        json.dumps(FRONTIER))
     assert main(_argv(tmp_path, ["--update"])) == 0
     (tmp_path / "BENCH_fleet.json").write_text(json.dumps(FLEET))
     assert main(_argv(tmp_path)) == 1
@@ -250,6 +287,7 @@ def test_missing_artifacts_is_a_usage_error(tmp_path):
     assert main(["--fleet", str(tmp_path / "nope.json"),
                  "--grid", str(tmp_path / "nope2.json"),
                  "--train", str(tmp_path / "nope3.json"),
+                 "--frontier", str(tmp_path / "nope4.json"),
                  "--baselines", str(tmp_path)]) == 2
 
 
@@ -259,6 +297,68 @@ def test_one_missing_artifact_still_fails(bench_dir, capsys):
     (bench_dir / "BENCH_grid.json").unlink()
     assert main(_argv(bench_dir)) == 2
     assert "missing benchmark artifact" in capsys.readouterr().out
+
+
+def test_frontier_fairness_floor_trips(bench_dir, capsys):
+    """A scenario whose best Jain index falls under the absolute floor
+    must fail even when the committed baseline itself recorded the
+    collapse (relative gates all pass after --update)."""
+    unfair = copy.deepcopy(FRONTIER)
+    row = unfair["scenarios"]["heterogeneous-rates"]
+    row["max_jain"] = 0.30
+    for p in row["points"]:
+        p["jain"] = 0.30
+    (bench_dir / "BENCH_lyapunov_frontier.json").write_text(
+        json.dumps(unfair))
+    assert main(_argv(bench_dir, ["--update"])) == 0
+    assert main(_argv(bench_dir)) == 1
+    assert "FAIL frontier fairness on heterogeneous-rates" in \
+        capsys.readouterr().out
+    # a relaxed floor clears the same artifact
+    assert main(_argv(bench_dir, ["--frontier-floor", "0.25"])) == 0
+
+
+def test_frontier_backlog_ceiling_trips(bench_dir, capsys):
+    """A grid point whose mean backlog punches through the O(V) ceiling
+    (the unstable-queue signature) must fail, with the ceiling terms
+    overridable."""
+    unstable = copy.deepcopy(FRONTIER)
+    row = unstable["scenarios"]["homogeneous"]
+    row["points"][0]["mean_qtot"] = 9_000.0     # V=5 ⇒ ceiling 175
+    (bench_dir / "BENCH_lyapunov_frontier.json").write_text(
+        json.dumps(unstable))
+    assert main(_argv(bench_dir)) == 1
+    out = capsys.readouterr().out
+    assert "FAIL frontier stability on homogeneous" in out
+    assert "V=5" in out
+    # an inflated ceiling clears the same artifact
+    assert main(_argv(bench_dir, ["--frontier-qtot-base", "10000"])) == 0
+
+
+def test_frontier_gate_fails_on_missing_section(bench_dir, capsys):
+    """Dropping the scenarios section must not turn the stability gate
+    into a silent no-op — and the relative gate must flag the vanished
+    baseline metrics too."""
+    (bench_dir / "BENCH_lyapunov_frontier.json").write_text(
+        json.dumps({"schema": "lyapunov-frontier/v1"}))
+    assert main(_argv(bench_dir)) == 1
+    out = capsys.readouterr().out
+    assert "no 'scenarios' section" in out
+    assert "missing from BENCH_lyapunov_frontier.json" in out
+
+
+def test_frontier_relative_gate_trips_on_throughput_drop(bench_dir,
+                                                         capsys):
+    """A 50% throughput collapse at unchanged fairness must trip the
+    baseline-relative frontier gate."""
+    slow = copy.deepcopy(FRONTIER)
+    row = slow["scenarios"]["homogeneous"]
+    row["max_throughput"] = 0.40
+    (bench_dir / "BENCH_lyapunov_frontier.json").write_text(
+        json.dumps(slow))
+    assert main(_argv(bench_dir)) == 1
+    assert "FAIL frontier.homogeneous.max_throughput" in \
+        capsys.readouterr().out
 
 
 def test_committed_baselines_cover_smoke_metrics():
@@ -286,3 +386,13 @@ def test_committed_baselines_cover_smoke_metrics():
         assert f"train.{key}" in train
         # the committed snapshot itself satisfies the absolute floor
         assert train[f"train.{key}"] >= cr.TRAIN_SPEEDUP_FLOOR
+    # the frontier baseline covers every benchmarked scenario plus the
+    # paper's own V-sweep, and its snapshot clears the fairness floor
+    from benchmarks.lyapunov_frontier import SCENARIOS as FRONTIER_SCENARIOS
+    with open(f"{cr.BASELINE_DIR}/BENCH_lyapunov_frontier.json") as f:
+        frontier = json.load(f)["metrics"]
+    for name in list(FRONTIER_SCENARIOS) + ["paper-v-sweep"]:
+        assert f"frontier.{name}.max_throughput" in frontier
+        assert f"frontier.{name}.max_jain" in frontier
+        assert frontier[f"frontier.{name}.max_jain"] >= \
+            cr.FRONTIER_JAIN_FLOOR
